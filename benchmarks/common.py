@@ -1,0 +1,103 @@
+"""Shared benchmark helpers: tiny-model training runs with exact delay
+simulation, timing, and iterations-to-target-loss measurement.
+
+All benchmarks run REDUCED-scale versions of the paper's experiments on CPU
+with fixed seeds; each module maps 1:1 to a paper table/figure and returns
+rows of (name, us_per_call, derived-metric).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    AttentionConfig,
+    BlockSpec,
+    MoEConfig,
+    ModelConfig,
+    OptimizerConfig,
+)
+from repro.data import batches
+from repro.models import init_model
+from repro.optim.factory import build_optimizer
+from repro.pipeline.simulate import run_sim_training
+
+BENCH_MODEL = ModelConfig(
+    name="bench_lm",
+    num_layers=8,
+    d_model=64,
+    d_ff=256,
+    vocab_size=128,
+    max_seq_len=64,
+    attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+    pattern=(BlockSpec("attn", "dense"),),
+    norm="layernorm",
+    mlp_act="gelu",
+    learnable_pos_emb=True,
+    scan_layers=False,
+)
+
+BENCH_MOE = BENCH_MODEL.replace(
+    name="bench_moe",
+    num_layers=4,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128),
+    pattern=(BlockSpec("attn", "moe"),),
+)
+
+
+def train_curve(
+    name: str,
+    stages: int,
+    steps: int,
+    cfg: ModelConfig = BENCH_MODEL,
+    lr: float = 3e-3,
+    seed: int = 0,
+    batch: int = 8,
+    seq: int = 32,
+    **okw,
+) -> Dict:
+    """Run one simulated-async training; returns losses + per-step wall time."""
+    ocfg = OptimizerConfig(name=name, learning_rate=lr, total_steps=steps,
+                           rotation_freq=okw.pop("rotation_freq", 5), **okw)
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    opt = build_optimizer(ocfg, params, cfg, num_stages=stages)
+    t0 = time.perf_counter()
+    _, _, losses = run_sim_training(
+        cfg, opt, batches(cfg, batch, seq, seed=seed), steps=steps, params=params
+    )
+    dt = time.perf_counter() - t0
+    return {"losses": losses, "us_per_step": 1e6 * dt / steps}
+
+
+def iters_to_loss(losses: Sequence[float], target: float) -> Optional[int]:
+    run_min = float("inf")
+    for i, l in enumerate(losses):
+        run_min = min(run_min, l)
+        if run_min <= target:
+            return i + 1
+    return None
+
+
+def slowdown(losses_delayed, losses_ref, target: float) -> float:
+    a = iters_to_loss(losses_delayed, target)
+    b = iters_to_loss(losses_ref, target)
+    if b is None or b == 0:
+        return float("nan")
+    if a is None:
+        return float("inf")  # never reached the target: the paper's "diverged"
+    return a / b
+
+
+def tail(losses: Sequence[float], k: int = 10) -> float:
+    return sum(losses[-k:]) / min(k, len(losses))
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.1f},{r.get('derived', '')}")

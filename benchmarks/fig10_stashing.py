@@ -1,0 +1,61 @@
+"""Fig. 10 (+15): robustness without weight stashing.
+
+Without stashing the forward/backward weight versions differ (incorrect
+gradients). Basis rotation stays robust; the baseline degrades. Also runs
+PipeMare-style weight prediction (Fig. 15)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from benchmarks.common import BENCH_MODEL, tail
+from repro.configs.base import OptimizerConfig
+from repro.data import batches
+from repro.models import init_model
+from repro.optim.base import make_schedule
+from repro.optim.factory import build_optimizer
+from repro.pipeline.partition import delay_tree
+from repro.pipeline.simulate import run_sim_training
+
+
+def _run(name, steps, no_stash=False, weight_prediction=False):
+    cfg = BENCH_MODEL
+    ocfg = OptimizerConfig(name=name, learning_rate=3e-3, total_steps=steps,
+                           rotation_freq=5)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = build_optimizer(ocfg, params, cfg, num_stages=8)
+    kw = {"delays_tree": delay_tree(params, cfg, 8)}
+    if weight_prediction:
+        kw["weight_prediction"] = True
+        kw["schedule"] = make_schedule("cosine", 3e-3, steps, 0.012)
+    _, _, losses = run_sim_training(
+        cfg, opt, batches(cfg, 8, 32, seed=0), steps=steps, params=params,
+        no_stash=no_stash, **kw,
+    )
+    return losses
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 400
+    rows = []
+    for m in ("adam", "basis_rotation"):
+        stash = _run(m, steps)
+        nostash = _run(m, steps, no_stash=True)
+        pred = _run(m, steps, weight_prediction=True)
+        rows.append({
+            "name": f"fig10/{m}",
+            "us_per_call": 0.0,
+            "derived": f"stash={tail(stash):.3f};nostash={tail(nostash):.3f};"
+                       f"wpred={tail(pred):.3f};"
+                       f"degradation={tail(nostash) - tail(stash):+.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

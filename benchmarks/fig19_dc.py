@@ -1,0 +1,32 @@
+"""Fig. 19: Delay Compensation (Zheng et al. 2017) baseline — DC fails to
+address large delays and tracks vanilla PipeDream."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import tail, train_curve
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 400
+    rows = []
+    base = train_curve("adam", stages=8, steps=steps)
+    rows.append({"name": "fig19/pipedream", "us_per_call": base["us_per_step"],
+                 "derived": f"final={tail(base['losses']):.3f}"})
+    for lam in (0.04, 0.1, 0.5, 1.0):
+        out = train_curve("delay_compensation", stages=8, steps=steps, dc_lambda=lam)
+        rows.append({
+            "name": f"fig19/dc_lambda{lam}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"final={tail(out['losses']):.3f};"
+                       f"vs_pipedream={tail(out['losses']) - tail(base['losses']):+.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

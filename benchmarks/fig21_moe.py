@@ -1,0 +1,31 @@
+"""Fig. 21: generalization to MoE — basis rotation applied per-expert on a
+nanoMoE-style model (4 experts, top-2) under P=4 async pipelining."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import BENCH_MOE, slowdown, tail, train_curve
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 400
+    rows = []
+    ref = train_curve("adam", stages=1, steps=steps, cfg=BENCH_MOE)
+    target = tail(ref["losses"]) * 1.07 + 0.02
+    for m in ("adam", "pipedream_lr", "basis_rotation"):
+        out = train_curve(m, stages=4, steps=steps, cfg=BENCH_MOE)
+        rows.append({
+            "name": f"fig21/{m}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"final={tail(out['losses']):.3f};"
+                       f"slowdown={slowdown(out['losses'], ref['losses'], target):.2f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,97 @@
+"""Fig. 4: spiral loss landscape — slowdown ratio T_delay/T_no-delay at
+aligned vs misaligned points along the trajectory.
+
+f(r, theta) = r^2 + (20 sin(4r - theta) + 1)^2 in polar coordinates;
+the Hessian eigenbasis rotates along the spiral, so alignment with the
+coordinate axes varies with the angle. We measure the iterations to traverse
+a fixed angular interval with and without delay tau=1 from several starting
+angles and report the min/max slowdown (aligned vs misaligned regions).
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, constant_schedule
+from repro.optim.base import apply_updates
+from repro.pipeline.delay import delayed_optimizer
+
+
+def spiral_loss(w):
+    x, y = w[0], w[1]
+    r = jnp.sqrt(x * x + y * y + 1e-9)
+    theta = jnp.arctan2(y, x)
+    return r**2 + (20.0 * jnp.sin(4.0 * r - theta) + 1.0) ** 2
+
+
+GRAD = jax.grad(spiral_loss)
+ANGLE_STEP = math.radians(3.0)
+
+
+def _iters_to_advance(theta0: float, tau: int, direction: float,
+                      max_iters: int = 3000) -> int:
+    """Iterations until the iterate advances ANGLE_STEP in `direction`
+    (signed — oscillating back and forth does not count as progress)."""
+    r0 = (theta0 + 20.0) / 4.0  # start near the sin-valley: 4r - theta = 0
+    w = jnp.asarray([r0 * math.cos(theta0), r0 * math.sin(theta0)])
+    base = adam(constant_schedule(0.1), beta1=0.0, beta2=0.9)
+    opt = delayed_optimizer(base, [tau]) if tau else base
+    params = {"w": w}
+    state = opt.init(params)
+    start_angle = math.atan2(float(w[1]), float(w[0]))
+    for t in range(max_iters):
+        ang = math.atan2(float(params["w"][1]), float(params["w"][0]))
+        d = (ang - start_angle + math.pi) % (2 * math.pi) - math.pi
+        if direction * d >= ANGLE_STEP:
+            return t + 1
+        g = {"w": GRAD(params["w"])}
+        u, state = opt.update(g, state, params, jnp.int32(t))
+        params = apply_updates(params, u)
+    return max_iters
+
+
+def _natural_direction(theta0: float, steps: int = 200) -> float:
+    """Sign of the no-delay trajectory's net angular drift."""
+    r0 = (theta0 + 20.0) / 4.0
+    w = jnp.asarray([r0 * math.cos(theta0), r0 * math.sin(theta0)])
+    opt = adam(constant_schedule(0.1), beta1=0.0, beta2=0.9)
+    params = {"w": w}
+    state = opt.init(params)
+    start_angle = math.atan2(float(w[1]), float(w[0]))
+    for t in range(steps):
+        g = {"w": GRAD(params["w"])}
+        u, state = opt.update(g, state, params, jnp.int32(t))
+        params = apply_updates(params, u)
+    ang = math.atan2(float(params["w"][1]), float(params["w"][0]))
+    d = (ang - start_angle + math.pi) % (2 * math.pi) - math.pi
+    return 1.0 if d >= 0 else -1.0
+
+
+def run(quick: bool = True):
+    angles = [0.0, 0.8, 1.6, 2.4, 3.2, 4.0] if quick else [i * 0.4 for i in range(16)]
+    t0 = time.perf_counter()
+    ratios = []
+    for th in angles:
+        direction = _natural_direction(th)
+        n0 = _iters_to_advance(th, tau=0, direction=direction)
+        n1 = _iters_to_advance(th, tau=1, direction=direction)
+        ratios.append(n1 / max(n0, 1))
+    dt = (time.perf_counter() - t0) * 1e6 / len(angles)
+    return [{
+        "name": "fig4/spiral_slowdown",
+        "us_per_call": dt,
+        "derived": f"min_ratio={min(ratios):.2f};max_ratio={max(ratios):.2f};"
+                   f"spread={max(ratios) / max(min(ratios), 1e-9):.2f}",
+    }]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,43 @@
+"""Fig. 5 (+12/13): robustness to pipeline depth P for the same model.
+
+Runs every method at P in {1, 8} (quick) or {1, 4, 8, 16} (full) on the
+reduced LM and reports final losses + slowdown (iterations to the target loss
+at max P relative to P=1)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import slowdown, tail, train_curve
+
+METHODS = ["adam", "pipedream_lr", "nesterov", "basis_rotation"]
+
+
+def run(quick: bool = True):
+    stages = [1, 8] if quick else [1, 4, 8, 16]
+    steps = 150 if quick else 400
+    rows = []
+    ref_curves = {}
+    for m in METHODS:
+        curves = {}
+        for p in stages:
+            out = train_curve(m, stages=p, steps=steps)
+            curves[p] = out
+        ref_curves[m] = curves
+        target = tail(curves[1]["losses"]) * 1.07 + 0.02
+        sd = slowdown(curves[stages[-1]]["losses"], curves[1]["losses"], target)
+        rows.append({
+            "name": f"fig5/{m}",
+            "us_per_call": curves[stages[-1]]["us_per_step"],
+            "derived": ";".join(
+                [f"final_P{p}={tail(curves[p]['losses']):.3f}" for p in stages]
+            ) + f";slowdown_P{stages[-1]}={sd:.2f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,40 @@
+"""Fig. 6 (+14): scaling the model by adding blocks, one block per stage.
+
+Baselines invert the scaling law under async pipelining (bigger model =>
+HIGHER loss); basis rotation restores it. Derived metric: final loss at each
+(blocks == stages) size."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import BENCH_MODEL, tail, train_curve
+
+
+def run(quick: bool = True):
+    sizes = [4, 8] if quick else [4, 8, 16, 32]
+    steps = 150 if quick else 400
+    rows = []
+    for m in ("adam", "basis_rotation"):
+        finals = {}
+        us = 0.0
+        for L in sizes:
+            cfg = BENCH_MODEL.replace(num_layers=L)
+            out = train_curve(m, stages=L, steps=steps, cfg=cfg)
+            finals[L] = tail(out["losses"])
+            us = out["us_per_step"]
+        trend = finals[sizes[-1]] - finals[sizes[0]]  # <0 => scaling works
+        rows.append({
+            "name": f"fig6/{m}",
+            "us_per_call": us,
+            "derived": ";".join(f"final_L{k}={v:.3f}" for k, v in finals.items())
+            + f";scaling_delta={trend:+.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

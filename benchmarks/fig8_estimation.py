@@ -1,0 +1,44 @@
+"""Fig. 8 / Table 8a: eigenbasis-estimation strategy comparison.
+
+All four (S x G) strategies at P=8 vs the PipeDream-LR baseline; derived:
+final loss + slowdown vs the P=1 reference (lower = more delay-robust)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import slowdown, tail, train_curve
+
+STRATS = [("1st", "unilateral"), ("1st", "bilateral"),
+          ("2nd", "unilateral"), ("2nd", "bilateral")]
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 400
+    ref = train_curve("adam", stages=1, steps=steps)
+    target = tail(ref["losses"]) * 1.07 + 0.02
+    rows = []
+    base = train_curve("pipedream_lr", stages=8, steps=steps)
+    rows.append({
+        "name": "fig8/pipedream_lr",
+        "us_per_call": base["us_per_step"],
+        "derived": f"final={tail(base['losses']):.3f};"
+                   f"slowdown={slowdown(base['losses'], ref['losses'], target):.2f}",
+    })
+    for src, geom in STRATS:
+        out = train_curve("basis_rotation", stages=8, steps=steps,
+                          rotation_source=src, rotation_geometry=geom)
+        rows.append({
+            "name": f"fig8/br_{src}_{geom[:3]}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"final={tail(out['losses']):.3f};"
+                       f"slowdown={slowdown(out['losses'], ref['losses'], target):.2f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

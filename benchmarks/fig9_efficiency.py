@@ -1,0 +1,46 @@
+"""Fig. 9: computational efficiency of basis rotation.
+
+(a) wall-clock per step vs baselines (us_per_call column);
+(b) basis-update frequency sweep (performance degrades only mildly);
+(c) stage-aware vs uniform vs reversed allocation under the same budget."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import tail, train_curve
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 400
+    rows = []
+    # (a) GPU-hours proxy: us/step at P=8
+    for m in ("adam", "nesterov", "basis_rotation"):
+        out = train_curve(m, stages=8, steps=steps)
+        rows.append({"name": f"fig9a/{m}", "us_per_call": out["us_per_step"],
+                     "derived": f"final={tail(out['losses']):.3f}"})
+    # (b) frequency sweep
+    for freq in (2, 10, 50):
+        out = train_curve("basis_rotation", stages=8, steps=steps, rotation_freq=freq)
+        rows.append({"name": f"fig9b/freq{freq}", "us_per_call": out["us_per_step"],
+                     "derived": f"final={tail(out['losses']):.3f}"})
+    # (c) stage-aware allocation (+ reversed ablation, Fig. 17)
+    uni = train_curve("basis_rotation", stages=8, steps=steps, rotation_freq=10)
+    sa = train_curve("basis_rotation", stages=8, steps=steps, rotation_freq=10,
+                     stage_aware=True)
+    rev = train_curve("basis_rotation", stages=8, steps=steps, rotation_freq=10,
+                      stage_aware=True, stage_aware_reversed=True)
+    rows.append({"name": "fig9c/uniform", "us_per_call": uni["us_per_step"],
+                 "derived": f"final={tail(uni['losses']):.3f}"})
+    rows.append({"name": "fig9c/stage_aware", "us_per_call": sa["us_per_step"],
+                 "derived": f"final={tail(sa['losses']):.3f}"})
+    rows.append({"name": "fig9c/reversed", "us_per_call": rev["us_per_step"],
+                 "derived": f"final={tail(rev['losses']):.3f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,60 @@
+"""Roofline summary (deliverable g): reads the dry-run JSONL artifacts and
+emits one row per (arch x shape x mesh) with the three terms and bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+FILES = [
+    "experiments/dryrun_singlepod.jsonl",
+    "experiments/dryrun_multipod.jsonl",
+    "experiments/dryrun_perf.jsonl",
+]
+
+
+def run(quick: bool = True):
+    rows = []
+    seen = set()
+    for path in FILES:
+        if not os.path.exists(path):
+            continue
+        for line in open(path):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("multi_pod"), r.get("variant", ""))
+            if key in seen:
+                continue
+            seen.add(key)
+            pod = "2pod" if r.get("multi_pod") else "1pod"
+            name = f"roofline/{r.get('arch')}/{r.get('shape')}/{pod}"
+            if r.get("variant"):
+                name += f"/{r['variant']}"
+            if r.get("status") != "ok":
+                rows.append({"name": name, "us_per_call": 0.0,
+                             "derived": f"status={r.get('status')};{r.get('reason', r.get('error', ''))[:60]}"})
+                continue
+            rows.append({
+                "name": name,
+                "us_per_call": 1e6 * max(r["compute_s"], r["memory_s"], r["collective_s"]),
+                "derived": (
+                    f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                    f"collective_s={r['collective_s']:.4f};bottleneck={r['bottleneck']};"
+                    f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                    f"peak_gb={r.get('peak_bytes_per_device', 0) / 1e9:.1f}"
+                ),
+            })
+    if not rows:
+        rows.append({"name": "roofline/missing", "us_per_call": 0.0,
+                     "derived": "run python -m repro.launch.dryrun --all first"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

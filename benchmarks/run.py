@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the longer versions;
+the default quick mode keeps the whole suite CPU-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+MODULES = [
+    "fig3_quadratic",
+    "fig4_spiral",
+    "fig5_stages",
+    "fig6_scaling",
+    "fig8_estimation",
+    "fig9_efficiency",
+    "fig10_stashing",
+    "fig11_alignment",
+    "fig19_dc",
+    "fig21_moe",
+    "tab2_memory",
+    "tab3_preconditioned",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated module filter")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [m for m in MODULES if m in args.only.split(",")]
+
+    print("name,us_per_call,derived")
+    for mod_name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(f"{r['name']},{r.get('us_per_call', 0):.1f},{r.get('derived', '')}",
+                      flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod_name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

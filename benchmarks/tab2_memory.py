@@ -1,0 +1,52 @@
+"""Table 2: memory overhead of the four estimation strategies on
+Llama-3-8B-shaped matrices (attention 4096x4096, MLP 4096x14336), FP32.
+
+Computed EXACTLY from the optimizer's real state pytrees (not formulas):
+we init the basis-rotation state for one matrix of each shape and count
+state bytes beyond plain Adam's m/v."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis_rotation_adam
+from repro.optim import constant_schedule
+
+SHAPES = {"attn": (4096, 4096), "mlp": (4096, 14336)}
+
+
+def _state_bytes(shape, source, geometry):
+    params = {"w": jax.ShapeDtypeStruct(shape, jnp.float32)}
+    opt = basis_rotation_adam(constant_schedule(1.0), source=source, geometry=geometry)
+    st = jax.eval_shape(opt.init, params)
+    leaf = st["leaves"][0]
+    extra = 0
+    for k, v in leaf.items():
+        if k in ("m", "v"):
+            continue
+        extra += v.size * 4
+    return extra
+
+
+def run(quick: bool = True):
+    rows = []
+    for source in ("2nd", "1st"):
+        for geometry in ("bilateral", "unilateral"):
+            attn = _state_bytes(SHAPES["attn"], source, geometry) / 1e9
+            mlp = _state_bytes(SHAPES["mlp"], source, geometry) / 1e9
+            rows.append({
+                "name": f"tab2/{source}_{geometry[:3]}",
+                "us_per_call": 0.0,
+                "derived": f"attn_gb={attn:.2f};mlp_gb={mlp:.2f}",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

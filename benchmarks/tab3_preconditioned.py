@@ -1,0 +1,35 @@
+"""Table 3: delay robustness of preconditioned optimizers at P=8.
+
+Basis alignment (basis rotation ~ SOAP) matters more than preconditioning
+per se: Muon (orthogonalised momentum, no eigenbasis alignment) improves on
+Adam but trails basis rotation. (Scion is omitted; see DESIGN.md.)"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import slowdown, tail, train_curve
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 400
+    rows = []
+    for m, lr in (("adam", 3e-3), ("nesterov", 3e-3), ("muon", 1e-3),
+                  ("scion", 1e-3), ("basis_rotation", 3e-3)):
+        ref = train_curve(m, stages=1, steps=steps, lr=lr)
+        out = train_curve(m, stages=8, steps=steps, lr=lr)
+        target = tail(ref["losses"]) * 1.07 + 0.02
+        rows.append({
+            "name": f"tab3/{m}",
+            "us_per_call": out["us_per_step"],
+            "derived": f"final_P8={tail(out['losses']):.3f};"
+                       f"slowdown={slowdown(out['losses'], ref['losses'], target):.2f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,59 @@
+"""Stage-aware basis rotation (paper Section 4.3 / Appendix I): allocate the
+basis-refresh budget proportionally to per-stage delay and compare uniform /
+stage-aware / reversed allocations at the same total budget.
+
+    PYTHONPATH=src python examples/stage_aware_rotation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs.base import (
+    AttentionConfig,
+    BlockSpec,
+    ModelConfig,
+    OptimizerConfig,
+)
+from repro.core.stage_aware import NEVER, freqs_for_delays
+from repro.data import batches
+from repro.models import init_model
+from repro.optim.factory import build_optimizer
+from repro.pipeline.partition import leaf_delays
+from repro.pipeline.simulate import run_sim_training
+
+CFG = ModelConfig(
+    num_layers=8, d_model=64, d_ff=256, vocab_size=128, max_seq_len=64,
+    attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+    pattern=(BlockSpec("attn", "dense"),), norm="layernorm", mlp_act="gelu",
+    learnable_pos_emb=True, scan_layers=False,
+)
+STAGES, STEPS = 8, 200
+
+
+def main():
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    delays = leaf_delays(params, CFG, STAGES)
+    freqs = freqs_for_delays(delays, STAGES, 10)
+    per_stage = sorted({(d, f) for d, f in zip(delays, freqs)})
+    print("delay -> refresh period (NEVER = no refresh):")
+    for d, f in per_stage:
+        print(f"  tau={d}: every {'NEVER' if f >= NEVER else f} steps")
+
+    for label, kw in [
+        ("uniform", {}),
+        ("stage-aware", {"stage_aware": True}),
+        ("reversed (ablation)", {"stage_aware": True, "stage_aware_reversed": True}),
+    ]:
+        ocfg = OptimizerConfig(name="basis_rotation", learning_rate=3e-3,
+                               total_steps=STEPS, rotation_freq=10, **kw)
+        opt = build_optimizer(ocfg, params, CFG, num_stages=STAGES)
+        _, _, losses = run_sim_training(
+            CFG, opt, batches(CFG, 8, 32, seed=0), steps=STEPS, params=params
+        )
+        print(f"{label:22s} final={sum(losses[-10:]) / 10:.4f}")
+
+
+if __name__ == "__main__":
+    main()

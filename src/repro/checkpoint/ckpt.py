@@ -1,0 +1,66 @@
+"""Pytree checkpointing: .npz arrays + JSON manifest of the tree structure.
+
+Handles arbitrary nesting of dicts / lists / tuples / None with jnp or numpy
+leaves. Restores exact dtypes and shapes; round-trips optimizer states
+(including the basis-rotation leaf list and delay-FIFO queues) and params.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _spec(tree: Any, prefix: str = "") -> Any:
+    if tree is None:
+        return {"__kind__": "none"}
+    if isinstance(tree, dict):
+        return {
+            "__kind__": "dict",
+            "keys": sorted(tree.keys()),
+            "children": {k: _spec(tree[k]) for k in sorted(tree.keys())},
+        }
+    if isinstance(tree, (list, tuple)):
+        return {
+            "__kind__": "list" if isinstance(tree, list) else "tuple",
+            "children": [_spec(x) for x in tree],
+        }
+    return {"__kind__": "leaf"}
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0, meta: Dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = jax.tree_util.tree_leaves(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"spec": _spec(tree), "num_leaves": len(leaves), "step": step,
+                "meta": meta or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _rebuild(spec: Any, leaves: list, pos: list) -> Any:
+    kind = spec["__kind__"]
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        x = leaves[pos[0]]
+        pos[0] += 1
+        return jnp.asarray(x)
+    if kind == "dict":
+        return {k: _rebuild(spec["children"][k], leaves, pos) for k in spec["keys"]}
+    children = [_rebuild(c, leaves, pos) for c in spec["children"]]
+    return children if kind == "list" else tuple(children)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    tree = _rebuild(manifest["spec"], leaves, [0])
+    return tree, manifest["step"], manifest.get("meta", {})

@@ -1,0 +1,31 @@
+from repro.configs.base import (
+    AttentionConfig,
+    BlockSpec,
+    INPUT_SHAPES,
+    InputShape,
+    MoEConfig,
+    ModelConfig,
+    OptimizerConfig,
+    PipelineConfig,
+    SSMConfig,
+    TrainConfig,
+)
+from repro.configs.catalog import ARCH_IDS, PAPER_IDS, all_configs, get_config, shapes_for
+
+__all__ = [
+    "AttentionConfig",
+    "BlockSpec",
+    "INPUT_SHAPES",
+    "InputShape",
+    "MoEConfig",
+    "ModelConfig",
+    "OptimizerConfig",
+    "PipelineConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "ARCH_IDS",
+    "PAPER_IDS",
+    "all_configs",
+    "get_config",
+    "shapes_for",
+]

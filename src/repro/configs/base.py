@@ -1,0 +1,237 @@
+"""Configuration dataclasses for models, input shapes and training.
+
+Every assigned architecture gets a module in ``repro.configs`` exporting
+``CONFIG`` (full size, exercised only through the AOT dry-run) and
+``SMOKE_CONFIG`` (reduced: <=2 superblocks, d_model<=512, <=4 experts) that is
+actually instantiated and stepped on CPU by the test-suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention / mixer / MLP configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Attention mixer configuration (GQA or MLA)."""
+
+    kind: str = "gqa"  # "gqa" | "mla"
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window size (None = full causal)
+    rope_theta: float = 10_000.0
+    # MLA-only fields (DeepSeek-V2 style latent attention)
+    q_lora_rank: int = 0  # 0 = no query compression
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def q_dim(self) -> int:
+        if self.kind == "mla":
+            return self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / recurrent mixer configuration."""
+
+    kind: str = "mamba"  # "mamba" | "mlstm" | "slstm"
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    num_heads: int = 4  # for m/sLSTM
+    proj_factor: float = 2.0  # mLSTM up-projection factor
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts MLP configuration."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared: int = 0  # DeepSeek-style always-on shared experts
+    d_ff_expert: int = 0  # 0 -> use model d_ff
+    aux_loss_coef: float = 0.01
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25
+    # GShard routing-group size; smaller groups shrink the dispatch one-hots
+    # (per-token dispatch flops scale with capacity ~ group * top_k / E)
+    group_size: int = 4096
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One layer inside the repeating superblock pattern."""
+
+    mixer: str = "attn"  # "attn" | "mamba" | "mlstm" | "slstm"
+    mlp: str = "dense"  # "dense" | "moe" | "none"
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""  # citation for the configuration
+    num_layers: int = 2
+    d_model: int = 256
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 4096
+    attention: AttentionConfig = field(default_factory=AttentionConfig)
+    ssm: Optional[SSMConfig] = None
+    moe: Optional[MoEConfig] = None
+    # Repeating layer pattern; len(pattern) must divide num_layers.
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    mlp_act: str = "swiglu"  # "swiglu" | "gelu"
+    tie_embeddings: bool = False
+    learnable_pos_emb: bool = False  # paper's nanoGPT models use this
+    # Modality frontend stub: embeddings are provided by input_specs().
+    frontend: Optional[str] = None  # None | "vision" | "audio"
+    frontend_tokens: int = 0  # number of prefix embedding tokens (vlm)
+    frontend_dim: int = 0  # raw embedding dim fed to the projector
+    num_codebooks: int = 1  # >1 => musicgen-style multi-codebook heads
+    # True: stack superblocks and lax.scan (compact HLO for deep dry-runs).
+    # False: one param subtree per layer (per-layer delay/freq in simulation).
+    scan_layers: bool = True
+    # Unroll the superblock scan (dry-run only): XLA cost_analysis counts a
+    # while-loop body ONCE, so rooflines need straight-line HLO.
+    scan_unroll: bool = False
+    # fp32 logits (paper default, CE stability) vs bf16 (saves the dominant
+    # temp buffer at 1M-token batches; CE still reduces in fp32)
+    logits_fp32: bool = True
+    # activation-checkpoint policy: "full" recomputes everything;
+    # "dots" saves matmul outputs (less recompute FLOPs, more memory)
+    remat_policy: str = "full"
+    # sequence parallelism (Korthikanti et al. 2023): shard the residual's
+    # sequence dim over the `model` axis between blocks, lowering the TP
+    # activation all-reduces to reduce-scatter + all-gather pairs (~2x less
+    # inter-chip traffic). [beyond-paper optimization]
+    seq_sharded: bool = False
+    # chunked cross-entropy: compute logits + CE over sequence chunks of this
+    # length so the (B, S, V) logits tensor is never materialised.
+    # 0 = off. [beyond-paper optimization]
+    loss_chunk: int = 0
+    dtype: str = "float32"  # compute dtype
+    param_dtype: str = "float32"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def num_superblocks(self) -> int:
+        assert self.num_layers % len(self.pattern) == 0, (
+            f"pattern length {len(self.pattern)} must divide "
+            f"num_layers {self.num_layers}"
+        )
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def supports_long_context(self) -> bool:
+        """True when the 500k decode shape is admissible (DESIGN.md §6):
+        recurrent/hybrid families, or attention that is windowed everywhere."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return all(
+            spec.mixer != "attn" or self.attention.window is not None
+            for spec in self.pattern
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned) and training configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "basis_rotation"  # adam | adamw | adasgd | nesterov |
+    # pipedream_lr | delay_compensation | basis_rotation
+    learning_rate: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # schedule
+    warmup_frac: float = 0.012
+    schedule: str = "cosine"  # "cosine" | "constant"
+    total_steps: int = 1000
+    # basis rotation
+    rotation_source: str = "2nd"  # "1st" | "2nd"
+    rotation_geometry: str = "bilateral"  # "unilateral" | "bilateral"
+    rotation_freq: int = 10
+    stage_aware: bool = False
+    stage_aware_reversed: bool = False  # ablation (Fig. 17)
+    # delay compensation
+    dc_lambda: float = 0.1
+    # nesterov (Ajanthan et al. use beta1=0.99)
+    nesterov_beta: float = 0.99
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    num_stages: int = 1
+    num_microbatches: int = 1
+    weight_stashing: bool = True
+    weight_prediction: bool = False  # PipeMare-style
+    schedule: str = "async"  # "sync" (GPipe) | "async" (PipeDream 1F1B)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    pipeline: PipelineConfig = field(default_factory=PipelineConfig)
+    batch_size: int = 8
+    seq_len: int = 512
+    steps: int = 100
+    seed: int = 0
+    log_every: int = 10

@@ -1,0 +1,135 @@
+"""Catalog of assigned architectures (public-literature pool) + paper models.
+
+Each architecture module exports ``CONFIG`` (the exact assigned configuration,
+exercised only through the AOT dry-run — never materialised on CPU) and
+``SMOKE_CONFIG`` (a reduced same-family variant: <=2 superblocks, d_model<=512,
+<=4 experts) that the test-suite instantiates and steps for real.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    AttentionConfig,
+    BlockSpec,
+    InputShape,
+    INPUT_SHAPES,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+)
+
+ARCH_IDS: List[str] = [
+    "llava_next_34b",
+    "mixtral_8x22b",
+    "stablelm_1_6b",
+    "qwen3_0_6b",
+    "qwen1_5_0_5b",
+    "phi4_mini_3_8b",
+    "jamba_v0_1_52b",
+    "deepseek_v2_236b",
+    "xlstm_1_3b",
+    "musicgen_large",
+]
+
+PAPER_IDS = ["paper_95m", "paper_1b", "paper_3b"]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS + PAPER_IDS}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name).replace("-", "_")
+    variant = None
+    if mod_name.endswith("_swa"):  # beyond-paper sliding-window variants
+        mod_name, variant = mod_name[: -len("_swa")], "SWA_CONFIG"
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    if smoke:
+        return mod.SMOKE_CONFIG
+    return getattr(mod, variant) if variant else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}
+
+
+def shapes_for(cfg: ModelConfig) -> List[InputShape]:
+    """Input shapes applicable to an architecture (long_500k policy: DESIGN §6)."""
+    out = [INPUT_SHAPES["train_4k"], INPUT_SHAPES["prefill_32k"], INPUT_SHAPES["decode_32k"]]
+    if cfg.supports_long_context():
+        out.append(INPUT_SHAPES["long_500k"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared smoke-reduction helper
+# ---------------------------------------------------------------------------
+
+
+def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Shrink a config to CPU-steppable size while keeping its family traits."""
+    d_model = min(cfg.d_model, 256)
+    att = cfg.attention
+    if att.kind == "mla":
+        att = AttentionConfig(
+            kind="mla",
+            num_heads=4,
+            num_kv_heads=4,
+            qk_norm=att.qk_norm,
+            rope_theta=att.rope_theta,
+            q_lora_rank=48 if att.q_lora_rank else 0,
+            kv_lora_rank=32,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        )
+    else:
+        n_heads = 4
+        n_kv = max(1, min(att.num_kv_heads * n_heads // max(att.num_heads, 1), n_heads))
+        att = AttentionConfig(
+            kind="gqa",
+            num_heads=n_heads,
+            num_kv_heads=n_kv,
+            head_dim=32,
+            qk_norm=att.qk_norm,
+            qkv_bias=att.qkv_bias,
+            window=min(att.window, 64) if att.window else None,
+            rope_theta=att.rope_theta,
+        )
+    moe = cfg.moe
+    if moe is not None:
+        moe = MoEConfig(
+            num_experts=min(moe.num_experts, 4),
+            top_k=min(moe.top_k, 2),
+            num_shared=min(moe.num_shared, 1),
+            d_ff_expert=64,
+            aux_loss_coef=moe.aux_loss_coef,
+        )
+    ssm = cfg.ssm
+    if ssm is not None:
+        ssm = SSMConfig(
+            kind=ssm.kind,
+            d_state=8,
+            d_conv=4,
+            expand=2,
+            num_heads=4,
+            proj_factor=ssm.proj_factor,
+        )
+    # one superblock of the (possibly shortened) pattern
+    pattern = cfg.pattern if len(cfg.pattern) <= 2 else cfg.pattern[:2]
+    kw = dict(
+        name=cfg.name + "_smoke",
+        num_layers=len(pattern),
+        d_model=d_model,
+        d_ff=4 * d_model if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 2048),
+        max_seq_len=256,
+        attention=att,
+        moe=moe,
+        ssm=ssm,
+        pattern=pattern,
+        frontend_tokens=4 if cfg.frontend else 0,
+        frontend_dim=32 if cfg.frontend else 0,
+    )
+    kw.update(overrides)
+    return cfg.replace(**kw)

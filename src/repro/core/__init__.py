@@ -1,0 +1,23 @@
+# The paper's primary contribution: Adam with Basis Rotation for
+# asynchronous pipeline parallelism (Algorithms 1-2 + stage-aware scheduling).
+from repro.core.basis_rotation import basis_rotation_adam
+from repro.core.layout import LeafPlan, build_layout, rotated_fraction
+from repro.core.rotation import power_qr, refresh_basis, rotate, unrotate
+from repro.core.stage_aware import freqs_for_delays, stage_aware_freq
+from repro.core.theory import effective_delay, norm_11, rotated_hessian
+
+__all__ = [
+    "basis_rotation_adam",
+    "LeafPlan",
+    "build_layout",
+    "rotated_fraction",
+    "power_qr",
+    "refresh_basis",
+    "rotate",
+    "unrotate",
+    "freqs_for_delays",
+    "stage_aware_freq",
+    "effective_delay",
+    "norm_11",
+    "rotated_hessian",
+]

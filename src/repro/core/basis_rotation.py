@@ -1,0 +1,156 @@
+"""Adam with Basis Rotation (paper Algorithm 1) — the core contribution.
+
+Per rotatable weight matrix W (m x n):
+    G_t  <- grad                                  (original space)
+    M_t  <- b1 M_{t-1} + (1-b1) G_t               (original space, Appendix G)
+    if t % freq == 0:  U,V <- Eigenbasis-Estimation(G_t, M_t, U, V)
+    G~ <- U^T G V ; M~ <- U^T M V                 (rotate at use time)
+    V~_t <- b2 V~_{t-1} + (1-b2) G~^2             (rotated second moment)
+    W <- W - lr * U ( M~ / sqrt(V~ + eps) ) V^T
+
+Non-rotatable leaves (embeddings, norms, biases, 1-D params) fall back to
+plain Adam — exactly the paper's setup.
+
+State is a flat list of per-leaf dicts (ordered like
+``jax.tree_util.tree_flatten(params)``), which keeps the whole thing a plain
+pytree: shardable under pjit, delayable under the FIFO wrapper, and
+checkpointable with no special cases.
+
+``freqs``: either a scalar int (uniform refresh period) or a list of ints per
+leaf (stage-aware allocation, `repro.core.stage_aware`). A freq <= 0 means
+"never refresh" (the basis stays at identity unless warm-started).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import LeafPlan, build_layout
+from repro.core.rotation import (
+    batched_eye,
+    refresh_basis,
+    rotate,
+    unrotate,
+)
+from repro.optim.base import Optimizer, Schedule, bias_correction
+
+
+def _init_leaf(p: jnp.ndarray, plan: LeafPlan, source: str) -> dict:
+    st = {
+        "m": jnp.zeros(p.shape, jnp.float32),
+        "v": jnp.zeros(p.shape, jnp.float32),
+    }
+    if not plan.rotate:
+        return st
+    batch = p.shape[:-2]
+    m, n = p.shape[-2], p.shape[-1]
+    if plan.left:
+        st["U"] = batched_eye(m, batch)
+        if source == "2nd":
+            st["L"] = jnp.zeros(batch + (m, m), jnp.float32)
+    if plan.right:
+        st["V"] = batched_eye(n, batch)
+        if source == "2nd":
+            st["R"] = jnp.zeros(batch + (n, n), jnp.float32)
+    return st
+
+
+def basis_rotation_adam(
+    schedule: Schedule,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    source: str = "2nd",
+    geometry: str = "bilateral",
+    freq: Union[int, Sequence[int]] = 10,
+    weight_decay: float = 0.0,
+    min_dim: int = 8,
+    use_kernels: bool = False,
+) -> Optimizer:
+    assert source in ("1st", "2nd") and geometry in ("unilateral", "bilateral")
+
+    if use_kernels:
+        from repro.kernels import ops as kops
+    else:
+        kops = None
+
+    def init(params):
+        layout = build_layout(params, geometry, min_dim)
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        return {"leaves": [_init_leaf(x, pl, source) for (_, x), pl in zip(flat, layout)]}
+
+    def update(grads, state, params, step, aux=None):
+        layout = build_layout(params, geometry, min_dim)
+        if isinstance(freq, int):
+            freqs: List[int] = [freq] * len(layout)
+        else:
+            freqs = list(freq)
+            assert len(freqs) == len(layout), "freq list must match leaf count"
+        lr = schedule(step)
+        bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
+
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        new_leaves = []
+        updates = []
+        for g, st, plan, f in zip(gflat, state["leaves"], layout, freqs):
+            g = g.astype(jnp.float32)
+            m = beta1 * st["m"] + (1 - beta1) * g
+            nst = dict(st)
+            nst["m"] = m
+
+            if plan.rotate:
+                U, V = st.get("U"), st.get("V")
+                L, R = st.get("L"), st.get("R")
+                if f > 0:
+
+                    def do_refresh(ops):
+                        Uo, Vo, Lo, Ro = ops
+                        return refresh_basis(g, m, Uo, Vo, Lo, Ro, source, beta2)
+
+                    def no_refresh(ops):
+                        return ops
+
+                    U, V, L, R = jax.lax.cond(
+                        step % f == 0, do_refresh, no_refresh, (U, V, L, R)
+                    )
+                if kops is not None:
+                    g_rot = kops.two_sided_rotate(g, U, V, transpose=True)
+                    m_rot = kops.two_sided_rotate(m, U, V, transpose=True)
+                else:
+                    g_rot = rotate(g, U, V)
+                    m_rot = rotate(m, U, V)
+                v = beta2 * st["v"] + (1 - beta2) * jnp.square(g_rot)
+                step_rot = (m_rot / bc1) / (jnp.sqrt(v / bc2) + eps)
+                if kops is not None:
+                    upd = -lr * kops.two_sided_rotate(step_rot, U, V, transpose=False)
+                else:
+                    upd = -lr * unrotate(step_rot, U, V)
+                nst["v"] = v
+                if U is not None:
+                    nst["U"] = U
+                if V is not None:
+                    nst["V"] = V
+                if L is not None:
+                    nst["L"] = L
+                if R is not None:
+                    nst["R"] = R
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * jnp.square(g)
+                upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                nst["v"] = v
+
+            updates.append(upd)
+            new_leaves.append(nst)
+
+        if weight_decay:
+            # decoupled weight decay on matrices only (norms/biases exempt)
+            pflat, _ = jax.tree_util.tree_flatten(params)
+            updates = [
+                u - lr * weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else u
+                for u, p in zip(updates, pflat)
+            ]
+        return jax.tree_util.tree_unflatten(gdef, updates), {"leaves": new_leaves}
+
+    return Optimizer(init, update)

@@ -1,0 +1,82 @@
+"""Rotation layout: decide, per parameter leaf, whether basis rotation
+applies and on which side(s).
+
+The paper rotates MLP and attention projection matrices and excludes
+embeddings, the LM head, biases, and normalisation parameters (Appendix D.2).
+We generalise to "any trailing-2D projection matrix with both dims >= min_dim"
+so the same rule covers MoE expert stacks, MLA low-rank factors, Mamba
+projections and xLSTM projections (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import jax
+
+EXCLUDE_SUBSTRINGS = (
+    "embed",
+    "lm_head",
+    "pos_emb",
+    "norm",
+    "bias",
+    "b_q",
+    "b_k",
+    "b_v",
+    "b_i",
+    "b_f",
+    "scale",
+    "A_log",
+    "dt_bias",
+    "conv_b",
+    "frontend_proj",
+)
+
+
+@dataclass(frozen=True)
+class LeafPlan:
+    path: str
+    shape: Tuple[int, ...]
+    rotate: bool
+    left: bool  # rotate rows (U)
+    right: bool  # rotate cols (V)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def plan_leaf(path: str, shape: Tuple[int, ...], geometry: str, min_dim: int = 8) -> LeafPlan:
+    rotatable = (
+        len(shape) >= 2
+        and min(shape[-2], shape[-1]) >= min_dim
+        and not any(s in path for s in EXCLUDE_SUBSTRINGS)
+    )
+    if not rotatable:
+        return LeafPlan(path, shape, False, False, False)
+    if geometry == "bilateral":
+        return LeafPlan(path, shape, True, True, True)
+    # unilateral: rotate the smaller dimension's side (cheaper, Appendix H)
+    m, n = shape[-2], shape[-1]
+    return LeafPlan(path, shape, True, m <= n, m > n)
+
+
+def build_layout(params: Any, geometry: str, min_dim: int = 8) -> List[LeafPlan]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [plan_leaf(path_str(p), tuple(x.shape), geometry, min_dim) for p, x in flat]
+
+
+def rotated_fraction(params: Any, layout: List[LeafPlan]) -> float:
+    """Fraction of parameters covered by rotation (coverage metric, DESIGN §5)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    tot = sum(int(x.size) for _, x in flat)
+    rot = sum(int(x.size) for (_, x), pl in zip(flat, layout) if pl.rotate)
+    return rot / max(tot, 1)

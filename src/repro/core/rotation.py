@@ -1,0 +1,102 @@
+"""Eigenbasis estimation and rotation primitives (paper Algorithm 2).
+
+All math is fp32 regardless of parameter dtype. Every function broadcasts
+over arbitrary leading (stacked-layer / expert) dimensions — `jnp.linalg.qr`
+and einsum are batched, so a scanned parameter stack of shape (L, E, m, n)
+rotates with a single call.
+
+The estimation taxonomy:
+  source   S = "2nd": EMA Kronecker factors L = EMA[G G^T], R = EMA[G^T G]
+           S = "1st": momentum outer products M M^T / M^T M (no extra state)
+  geometry G = "bilateral": rotate both sides (U and V)
+           G = "unilateral": rotate only the smaller dimension's side
+
+One power-iteration step + QR per refresh (Wang et al. 2024), with a
+deterministic sign convention so bases are reproducible.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def power_qr(A: jnp.ndarray, Q: jnp.ndarray) -> jnp.ndarray:
+    """One power-iteration step followed by QR: Q' = qr(A @ Q).Q.
+
+    A: (..., n, n) symmetric PSD; Q: (..., n, k) orthonormal columns.
+    """
+    Z = jnp.einsum("...ij,...jk->...ik", A.astype(jnp.float32), Q.astype(jnp.float32))
+    Qn, R = jnp.linalg.qr(Z)
+    # fix signs (QR is unique only up to column signs): diag(R) >= 0
+    sign = jnp.sign(jnp.diagonal(R, axis1=-2, axis2=-1))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    return Qn * sign[..., None, :]
+
+
+def batched_eye(n: int, batch_shape: Tuple[int, ...]) -> jnp.ndarray:
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return jnp.broadcast_to(eye, batch_shape + (n, n))
+
+
+def gram_left(g: jnp.ndarray) -> jnp.ndarray:
+    """(..., m, n) -> (..., m, m) = G @ G^T."""
+    g = g.astype(jnp.float32)
+    return jnp.einsum("...ik,...jk->...ij", g, g)
+
+
+def gram_right(g: jnp.ndarray) -> jnp.ndarray:
+    """(..., m, n) -> (..., n, n) = G^T @ G."""
+    g = g.astype(jnp.float32)
+    return jnp.einsum("...ki,...kj->...ij", g, g)
+
+
+def rotate(
+    x: jnp.ndarray, U: Optional[jnp.ndarray], V: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """x_tilde = U^T x V (missing side = identity)."""
+    x = x.astype(jnp.float32)
+    if U is not None:
+        x = jnp.einsum("...ji,...jk->...ik", U, x)
+    if V is not None:
+        x = jnp.einsum("...ij,...jk->...ik", x, V)
+    return x
+
+
+def unrotate(
+    x: jnp.ndarray, U: Optional[jnp.ndarray], V: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """x = U x_tilde V^T (missing side = identity)."""
+    x = x.astype(jnp.float32)
+    if U is not None:
+        x = jnp.einsum("...ij,...jk->...ik", U, x)
+    if V is not None:
+        x = jnp.einsum("...ik,...jk->...ij", x, V)
+    return x
+
+
+def refresh_basis(
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    U: Optional[jnp.ndarray],
+    V: Optional[jnp.ndarray],
+    L: Optional[jnp.ndarray],
+    R: Optional[jnp.ndarray],
+    source: str,
+    beta2: float,
+):
+    """One Eigenbasis-Estimation step (Algorithm 2). Returns (U, V, L, R)."""
+    if source == "2nd":
+        if U is not None:
+            L = beta2 * L + (1 - beta2) * gram_left(g)
+            U = power_qr(L, U)
+        if V is not None:
+            R = beta2 * R + (1 - beta2) * gram_right(g)
+            V = power_qr(R, V)
+    else:  # 1st: reuse the momentum buffer, no dedicated Fisher state
+        if U is not None:
+            U = power_qr(gram_left(m), U)
+        if V is not None:
+            V = power_qr(gram_right(m), V)
+    return U, V, L, R

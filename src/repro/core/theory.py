@@ -1,0 +1,89 @@
+"""Theory utilities: basis-misalignment proxies and effective delay.
+
+The paper uses the Hessian (1,1)-norm  ||H||_{1,1} = sum_ij |H_ij|  as the
+misalignment proxy (Section 2.3): for a fixed spectrum it is minimised when H
+is diagonal (basis-aligned) and grows under rotation away from the eigenbasis.
+Theorem E.6's stage-aware effective delay
+
+    tau' = sqrt( sum_i C_i^2 tau_i^2 / sum_i C_i^2 )
+
+is what the stage-aware frequency allocation minimises.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def norm_11(H: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(H))
+
+
+def rotated_hessian(
+    H: jnp.ndarray, U: Optional[jnp.ndarray], V: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """Hessian of f(U w~ V^T) given H over vec(W): H~ = (V (x) U)^T H (V (x) U).
+
+    For the Kronecker-structured case used in Theorem 3.1, pass H = kron(A, B)
+    with A (n x n), B (m x m); rotation matrices U (m x m), V (n x n).
+    """
+    mn = H.shape[0]
+    if U is None and V is None:
+        return H
+    if U is None:
+        m = mn // V.shape[0]
+        U = jnp.eye(m)
+    if V is None:
+        n = mn // U.shape[0]
+        V = jnp.eye(n)
+    T = jnp.kron(V, U)
+    return T.T @ H @ T
+
+
+def effective_delay(c_sq: jnp.ndarray, taus: jnp.ndarray) -> jnp.ndarray:
+    """tau' = sqrt( sum C_i^2 tau_i^2 / sum C_i^2 )  (Eq. 3)."""
+    c_sq = c_sq.astype(jnp.float32)
+    taus = taus.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(c_sq * taus**2) / jnp.maximum(jnp.sum(c_sq), 1e-30))
+
+
+def stage_effective_delay(stage_c_sq: Sequence[float], num_stages: int) -> float:
+    """tau' from per-stage smoothness mass, tau_k = K-1-k for k = 0..K-1."""
+    c = jnp.asarray(stage_c_sq, jnp.float32)
+    taus = jnp.asarray([num_stages - 1 - k for k in range(num_stages)], jnp.float32)
+    return float(effective_delay(c, taus))
+
+
+def estimate_norm_11(
+    hvp: Callable[[jnp.ndarray], jnp.ndarray],
+    dim: int,
+    key: jax.Array,
+    num_samples: int = 64,
+) -> jnp.ndarray:
+    """Estimate ||H||_{1,1} via random Cauchy quadratic forms (Xie et al. 2025).
+
+    For v with iid standard-Cauchy entries, v^T H v is (approximately) Cauchy
+    with scale ~ ||H||_{1,1}; the median of |v^T H v| estimates the scale
+    (median of |Cauchy(0, s)| = s).
+    """
+    keys = jax.random.split(key, num_samples)
+
+    def one(k):
+        v = jax.random.cauchy(k, (dim,))
+        return jnp.abs(jnp.vdot(v, hvp(v)))
+
+    samples = jax.vmap(one)(keys)
+    return jnp.median(samples)
+
+
+def model_hvp(loss_fn: Callable, params, flatten_fn, unflatten_fn) -> Callable:
+    """Hessian-vector product over flattened parameters."""
+
+    def hvp(v_flat):
+        v = unflatten_fn(v_flat)
+        _, tangent = jax.jvp(jax.grad(loss_fn), (params,), (v,))
+        return flatten_fn(tangent)
+
+    return hvp

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, batches, eval_batches, sharded_batches
+
+__all__ = ["SyntheticLM", "batches", "eval_batches", "sharded_batches"]

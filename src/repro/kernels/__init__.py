@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the perf-critical layers:
+#  - matmul.py     : tiled MXU matmul (basis-rotation rotations)
+#  - adam_step.py  : fused second-moment EMA + bias-corrected step
+#  - flash.py      : flash attention (online softmax, causal/windowed)
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

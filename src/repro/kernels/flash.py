@@ -1,0 +1,124 @@
+"""Flash-attention Pallas kernel (online softmax), causal + sliding window.
+
+The attention score matrix is never materialised in HBM: the kernel streams
+K/V blocks against each Q block, carrying the running row-max m, normaliser l
+and output accumulator in VMEM scratch — the TPU-fused version of the
+chunked-attention schedule used by the pure-JAX model path
+(`repro.models.attention`). BlockSpecs are 128-aligned for the MXU.
+
+Layout: inputs are (BH, S, dh) with batch*heads flattened into the leading
+grid dimension; grid = (BH, S/bq, S/bk) with the K dimension innermost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, bq: int, bk: int, k_steps: int, causal: bool, window
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == k_steps - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q,k,v: (B, H, S, dh) -> (B, H, S, dh). S must divide by the blocks."""
+    B, H, S, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, "seq must divide block sizes"
+    BH = B * H
+    qf = q.reshape(BH, S, dh)
+    kf = k.reshape(BH, S, dh)
+    vf = v.reshape(BH, S, dh)
+    k_steps = S // bk
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        scratch = [
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ]
+    except Exception:  # pragma: no cover
+        scratch = [
+            jax.ShapeDtypeStruct((bq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bq, dh), jnp.float32),
+        ]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, bq=bq, bk=bk,
+            k_steps=k_steps, causal=causal, window=window,
+        ),
+        grid=(BH, S // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dh)

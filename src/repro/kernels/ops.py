@@ -1,0 +1,74 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the kernel body runs in Python on CPU
+for correctness validation) and False on TPU (compiled Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adam_step import fused_adam_scale
+from repro.kernels.flash import flash_attention
+from repro.kernels.matmul import matmul
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pallas_matmul(a, b, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return matmul(a, b, **kw)
+
+
+def _rotate2d(x, U, V, transpose: bool, interpret: bool):
+    x = x.astype(jnp.float32)
+    if U is not None:
+        Uf = U.astype(jnp.float32)
+        x = matmul(Uf.T if transpose else Uf, x, interpret=interpret)
+    if V is not None:
+        Vf = V.astype(jnp.float32)
+        x = matmul(x, Vf if transpose else Vf.T, interpret=interpret)
+    return x
+
+
+def two_sided_rotate(x, U=None, V=None, *, transpose: bool = True,
+                     interpret: Optional[bool] = None):
+    """U^T x V (transpose=True) or U x V^T (transpose=False).
+
+    Supports arbitrary leading batch dims (vmapped over them); U/V may be
+    None for unilateral rotation.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    nbatch = x.ndim - 2
+    fn = functools.partial(_rotate2d, transpose=transpose, interpret=interpret)
+    for _ in range(nbatch):
+        fn = jax.vmap(fn)
+    return fn(x, U, V)
+
+
+def adam_scale(g, m, v, beta2, eps, bc1, bc2, *, interpret: Optional[bool] = None):
+    """Fused (step_dir, v_new); arbitrary leading batch dims."""
+    interpret = default_interpret() if interpret is None else interpret
+    fn = functools.partial(fused_adam_scale, interpret=interpret)
+    nbatch = g.ndim - 2
+    if g.ndim == 1:
+        s, vn = fn(g[None, :], m[None, :], v[None, :], beta2, eps, bc1, bc2)
+        return s[0], vn[0]
+    f = fn
+    for _ in range(nbatch):
+        f = jax.vmap(f, in_axes=(0, 0, 0, None, None, None, None))
+    return f(g, m, v, beta2, eps, bc1, bc2)
+
+
+def attention(q, k, v, *, causal=True, window=None, interpret: Optional[bool] = None,
+              block_q: int = 128, block_k: int = 128):
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

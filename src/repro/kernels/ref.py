@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def two_sided_rotate_ref(x, U, V, transpose: bool = True):
+    """transpose=True: U^T x V (into rotated space);
+    transpose=False: U x V^T (back to original space). U/V may be None."""
+    x = x.astype(jnp.float32)
+    if U is not None:
+        Uf = U.astype(jnp.float32)
+        x = jnp.einsum("...ji,...jk->...ik", Uf, x) if transpose else jnp.einsum(
+            "...ij,...jk->...ik", Uf, x
+        )
+    if V is not None:
+        Vf = V.astype(jnp.float32)
+        x = jnp.einsum("...ij,...jk->...ik", x, Vf) if transpose else jnp.einsum(
+            "...ik,...jk->...ij", x, Vf
+        )
+    return x
+
+
+def fused_adam_scale_ref(g, m, v, beta2, eps, bc1, bc2):
+    g = g.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    step = (m / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    return step, v_new
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None):
+    """O = softmax(QK^T * scale + mask) V. q,k,v: (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

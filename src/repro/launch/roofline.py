@@ -1,0 +1,167 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. The three terms (seconds, per chip):
+
+    compute    = FLOPs_per_chip / 197e12
+    memory     = HBM_bytes_per_chip / 819e9
+    collective = collective_bytes_per_chip / 50e9
+
+`cost_analysis()` on an SPMD-partitioned executable reports per-device
+FLOPs/bytes (shapes in the post-partitioning module are per-device), so no
+further division by chip count is applied. Collective bytes are not in
+cost_analysis: we parse the optimized HLO and sum the output-type sizes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (== operand size for AR/a2a/permute; the gathered /
+scattered size for AG/RS — the per-device traffic proxy).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  f32[128,1024]{1,0}   or  bf16[2,8]   or tuple elements
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+# one HLO instruction: "%name = <output type(s)> <op>(...)" — we bill each
+# collective by its OUTPUT type(s), which works uniformly for single and
+# tuple-combined collectives (optimized HLO prints operands as bare
+# instruction references without types). For all-reduce / all-to-all /
+# collective-permute output size == operand size; for all-gather it is the
+# gathered (larger) size and for reduce-scatter the scattered (smaller) one —
+# both are natural per-device traffic proxies.
+_INSTR_RE = re.compile(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+?)(-start|-done)?\(")
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-type bytes of every collective op in (optimized) HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        out_types, base, suffix = m.group(1), m.group(2), m.group(3)
+        if base not in COLLECTIVE_OPS:
+            continue
+        if suffix == "-done":
+            continue  # counted at -start
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(out_types))
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + nbytes
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    peak_memory_bytes: float = 0.0
+    model_flops: float = 0.0
+    collectives: Optional[Dict[str, int]] = None
+
+    @property
+    def step_time_s(self) -> float:
+        # optimistic overlap model: terms overlap perfectly
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collectives": self.collectives or {},
+        }
+
+
+def roofline_from_compiled(compiled, model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    stats = collective_stats(compiled.as_text())
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = (
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = stats.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=stats.total_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=max(terms, key=terms.get),
+        peak_memory_bytes=peak,
+        model_flops=model_flops,
+        collectives=dict(stats.bytes_by_op),
+    )
+
+
+def dense_model_flops(n_params: int, tokens: int, mode: str = "train") -> float:
+    """6*N*D for training; 2*N*D for a forward/decode pass."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_params * tokens

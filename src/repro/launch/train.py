@@ -1,0 +1,131 @@
+"""End-to-end training driver (single-host simulation of K-stage async
+pipeline parallelism — the paper's experimental setup).
+
+    PYTHONPATH=src python -m repro.launch.train \\
+        --arch paper_95m --stages 8 --optimizer basis_rotation \\
+        --steps 300 --batch 8 --seq 256 --lr 1e-3
+
+Checkpoints land under --ckpt-dir every --ckpt-every steps and training
+resumes from the latest one if present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import OptimizerConfig, get_config
+from repro.data import batches
+from repro.models import init_model, param_count
+from repro.optim.base import make_schedule
+from repro.optim.factory import build_optimizer
+from repro.pipeline.partition import delay_tree
+from repro.pipeline.simulate import make_sim_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper_95m")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--stages", type=int, default=8)
+    ap.add_argument("--optimizer", default="basis_rotation")
+    ap.add_argument("--rotation-source", default="2nd", choices=["1st", "2nd"])
+    ap.add_argument("--rotation-geometry", default="bilateral",
+                    choices=["unilateral", "bilateral"])
+    ap.add_argument("--rotation-freq", type=int, default=10)
+    ap.add_argument("--stage-aware", action="store_true")
+    ap.add_argument("--weight-prediction", action="store_true")
+    ap.add_argument("--no-stash", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--out", default=None, help="write the loss curve as JSON")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    # the simulator needs per-layer leaves for per-stage delays
+    cfg = cfg.replace(scan_layers=False, dtype="float32", param_dtype="float32")
+    if cfg.num_layers % args.stages != 0:
+        raise SystemExit(f"--stages {args.stages} must divide {cfg.num_layers} layers")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model(key, cfg)
+    print(f"arch={cfg.name} params={param_count(params):,} stages={args.stages} "
+          f"optimizer={args.optimizer}")
+
+    ocfg = OptimizerConfig(
+        name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
+        rotation_source=args.rotation_source,
+        rotation_geometry=args.rotation_geometry,
+        rotation_freq=args.rotation_freq, stage_aware=args.stage_aware,
+    )
+    opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages)
+    opt_state = opt.init(params)
+    sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps,
+                          ocfg.warmup_frac)
+    dtree = delay_tree(params, cfg, args.stages)
+
+    start_step = 0
+    if args.ckpt_dir and os.path.exists(os.path.join(args.ckpt_dir, "manifest.json")):
+        (params, opt_state), start_step, _ = load_checkpoint(args.ckpt_dir)
+        print(f"resumed from {args.ckpt_dir} at step {start_step}")
+
+    step_fn = make_sim_train_step(
+        cfg, opt, grad_clip=1.0,
+        weight_prediction=args.weight_prediction, delays_tree=dtree,
+        schedule=sched, no_stash=args.no_stash,
+    )
+    data = batches(cfg, args.batch, args.seq, seed=args.seed)
+    from repro.pipeline.simulate import stale_forward_params
+
+    max_age = max(int(d) for d in jax.tree_util.tree_leaves(dtree)) if args.no_stash else 0
+    history = []
+
+    losses = []
+    t0 = time.time()
+    for t in range(start_step, args.steps):
+        batch = next(data)
+        fwd_hist = (
+            stale_forward_params(history, params, dtree) if args.no_stash else 0
+        )
+        params, opt_state, loss, metrics = step_fn(
+            params, opt_state, fwd_hist, batch, jnp.int32(t)
+        )
+        if args.no_stash and max_age:
+            history.append(params)
+            history = history[-(max_age + 1):]
+        losses.append(float(loss))
+        if t % args.log_every == 0:
+            dt = time.time() - t0
+            print(f"step {t:5d}  loss {losses[-1]:.4f}  ce {float(metrics['ce']):.4f}"
+                  f"  ({dt:.1f}s)")
+        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, (params, opt_state), step=t + 1)
+        if args.out and (t + 1) % max(args.log_every, 1) == 0:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:  # incremental: survives interruption
+                json.dump({"arch": cfg.name, "optimizer": args.optimizer,
+                           "stages": args.stages, "steps_done": t + 1,
+                           "losses": losses}, f)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, (params, opt_state), step=args.steps)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"arch": cfg.name, "optimizer": args.optimizer,
+                       "stages": args.stages, "losses": losses}, f)
+    print(f"final loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.models.model import (
+    cross_entropy,
+    forward_decode,
+    forward_train,
+    init_cache,
+    init_model,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "cross_entropy",
+    "forward_decode",
+    "forward_train",
+    "init_cache",
+    "init_model",
+    "loss_fn",
+    "param_count",
+]

@@ -1,0 +1,307 @@
+"""Attention mixers: GQA (optionally sliding-window / qk-norm / biased) and
+DeepSeek-style MLA (multi-head latent attention with a compressed KV cache).
+
+Two entry points per mixer:
+  * ``*_train``  — full-sequence causal attention (training / prefill).
+  * ``*_decode`` — one new token against a pre-allocated cache (serving).
+
+Caches:
+  GQA full   : k/v of shape (B, Hkv, S_max, dh), absolute-position RoPE.
+  GQA window : ring buffer of shape (B, Hkv, W, dh) — O(W) memory, enables
+               the 500k-token decode shape for windowed configs.
+  MLA        : compressed latent (B, S_max, kv_lora) + shared roped key
+               (B, S_max, dr) — 64x smaller than a materialised KV cache; the
+               decode path uses the "absorbed" formulation so per-step cost is
+               linear in S with no per-head K/V expansion.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm_headwise
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, cfg: AttentionConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    if cfg.kind == "mla":
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H = cfg.num_heads
+        p = {
+            "kv_a": dense_init(ks[0], (d_model, cfg.kv_lora_rank + dr), dtype),
+            "kv_b": dense_init(ks[1], (cfg.kv_lora_rank, H * (dn + dv)), dtype),
+            "w_o": dense_init(ks[2], (H * dv, d_model), dtype),
+            "kv_a_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        }
+        if cfg.q_lora_rank > 0:
+            p["q_a"] = dense_init(ks[3], (d_model, cfg.q_lora_rank), dtype)
+            p["q_b"] = dense_init(ks[4], (cfg.q_lora_rank, H * (dn + dr)), dtype)
+            p["q_a_norm"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        else:
+            p["w_q"] = dense_init(ks[3], (d_model, H * (dn + dr)), dtype)
+        return p
+
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "w_q": dense_init(ks[0], (d_model, H * dh), dtype),
+        "w_k": dense_init(ks[1], (d_model, Hkv * dh), dtype),
+        "w_v": dense_init(ks[2], (d_model, Hkv * dh), dtype),
+        "w_o": dense_init(ks[3], (H * dh, d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H * dh,), dtype)
+        p["b_k"] = jnp.zeros((Hkv * dh,), dtype)
+        p["b_v"] = jnp.zeros((Hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params: dict, x: jnp.ndarray, cfg: AttentionConfig):
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, params["q_norm"])
+        k = rms_norm_headwise(k, params["k_norm"])
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """q: (B,H,Sq,dh), k: (B,Hkv,Sk,dh) -> (B,H,Sq,Sk) with KV grouping."""
+    B, H, Sq, dh = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(B, Hkv, groups, Sq, dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k)
+    return s.reshape(B, H, Sq, k.shape[2])
+
+
+def _gqa_mix(w: jnp.ndarray, v: jnp.ndarray, groups: int) -> jnp.ndarray:
+    B, H, Sq, Sk = w.shape
+    Hkv = v.shape[1]
+    wg = w.reshape(B, Hkv, groups, Sq, Sk)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", wg, v)
+    return o.reshape(B, H, Sq, v.shape[3])
+
+
+# Above this sequence length the full (S x S) score matrix is not
+# materialised: queries stream in blocks (flash-attention memory behaviour,
+# expressed in pure JAX with lax.scan + remat; the Pallas kernel in
+# repro/kernels is the TPU-fused version of the same schedule).
+CHUNKED_ATTN_THRESHOLD = 8192
+QUERY_BLOCK = 2048
+
+
+def _attn_dense(q, k, v, cfg: AttentionConfig, q_offset: int | jnp.ndarray, S_kv: int):
+    """Causal (optionally windowed) attention for one query block."""
+    Sq = q.shape[2]
+    scores = _gqa_scores(q, k, cfg.kv_groups) / math.sqrt(cfg.head_dim)
+    i = q_offset + jnp.arange(Sq)[:, None]
+    j = jnp.arange(S_kv)[None, :]
+    mask = j <= i
+    if cfg.window is not None:
+        mask &= j > i - cfg.window
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_mix(w, v, cfg.kv_groups)
+
+
+def gqa_train(params: dict, x: jnp.ndarray, cfg: AttentionConfig) -> jnp.ndarray:
+    B, S, d_model = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    positions = jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if S <= CHUNKED_ATTN_THRESHOLD or S % QUERY_BLOCK != 0:
+        o = _attn_dense(q, k, v, cfg, 0, S)
+    else:
+        nblk = S // QUERY_BLOCK
+        qb = q.reshape(B, q.shape[1], nblk, QUERY_BLOCK, cfg.head_dim)
+        qb = jnp.moveaxis(qb, 2, 0)  # (nblk, B, H, qblk, dh)
+
+        def body(_, args):
+            blk_q, offset = args
+            out = _attn_dense(blk_q, k, v, cfg, offset, S)
+            return None, out
+
+        offsets = jnp.arange(nblk) * QUERY_BLOCK
+        _, ob = jax.lax.scan(jax.checkpoint(body), None, (qb, offsets))
+        o = jnp.moveaxis(ob, 0, 2).reshape(B, q.shape[1], S, cfg.head_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return o @ params["w_o"]
+
+
+def init_gqa_cache(batch: int, seq_len: int, cfg: AttentionConfig, dtype) -> dict:
+    size = cfg.window if cfg.window is not None else seq_len
+    shape = (batch, cfg.num_kv_heads, size, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(
+    params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, cfg: AttentionConfig
+) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d_model); pos: scalar int32 — index of the new token."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg)  # (B,H,1,dh)/(B,Hkv,1,dh)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+
+    size = cache["k"].shape[2]
+    slot = pos % size if cfg.window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+
+    scores = _gqa_scores(q, k_cache, cfg.kv_groups) / math.sqrt(cfg.head_dim)
+    idx = jnp.arange(size)
+    if cfg.window is not None:
+        # slots hold tokens (pos - size, pos]; invalid until written
+        age = (slot - idx) % size
+        valid = age <= jnp.minimum(pos, size - 1)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_mix(w, v_cache, cfg.kv_groups)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    return o @ params["w_o"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_queries(params: dict, x: jnp.ndarray, cfg: AttentionConfig):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "q_a" in params:
+        cq = x @ params["q_a"]
+        cq = rms_norm_headwise(cq, params["q_a_norm"])
+        q = cq @ params["q_b"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(B, S, H, dn + dr).transpose(0, 2, 1, 3)
+    return q[..., :dn], q[..., dn:]  # nope, rope
+
+
+def _mla_latent(params: dict, x: jnp.ndarray, cfg: AttentionConfig):
+    ckv = x @ params["kv_a"]
+    latent, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank :]
+    latent = rms_norm_headwise(latent, params["kv_a_norm"])
+    return latent, k_rope  # (B,S,r), (B,S,dr)
+
+
+def mla_train(params: dict, x: jnp.ndarray, cfg: AttentionConfig) -> jnp.ndarray:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.arange(S)
+
+    q_nope, q_rope = _mla_queries(params, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    latent, k_rope = _mla_latent(params, x, cfg)
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,dr)
+
+    kv = (latent @ params["kv_b"]).reshape(B, S, H, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    def block(q_n, q_r, offset):
+        Sq = q_n.shape[2]
+        scores = (
+            jnp.einsum("bhqd,bhsd->bhqs", q_n, k_nope)
+            + jnp.einsum("bhqd,bzsd->bhqs", q_r, k_rope)
+        ) * scale
+        i = offset + jnp.arange(Sq)[:, None]
+        j = jnp.arange(S)[None, :]
+        scores = jnp.where(j <= i, scores.astype(jnp.float32), NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqs,bhsd->bhqd", w, v)
+
+    if S <= CHUNKED_ATTN_THRESHOLD or S % QUERY_BLOCK != 0:
+        o = block(q_nope, q_rope, 0)
+    else:
+        nblk = S // QUERY_BLOCK
+        qn = jnp.moveaxis(q_nope.reshape(B, H, nblk, QUERY_BLOCK, dn), 2, 0)
+        qr = jnp.moveaxis(q_rope.reshape(B, H, nblk, QUERY_BLOCK, dr), 2, 0)
+
+        def body(_, args):
+            bq_n, bq_r, offset = args
+            return None, block(bq_n, bq_r, offset)
+
+        offsets = jnp.arange(nblk) * QUERY_BLOCK
+        _, ob = jax.lax.scan(jax.checkpoint(body), None, (qn, qr, offsets))
+        o = jnp.moveaxis(ob, 0, 2).reshape(B, H, S, dv)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    return o @ params["w_o"]
+
+
+def init_mla_cache(batch: int, seq_len: int, cfg: AttentionConfig, dtype) -> dict:
+    return {
+        "latent": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(
+    params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, cfg: AttentionConfig
+) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed MLA decode: attention runs in the compressed latent space."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q_nope, q_rope = _mla_queries(params, x, cfg)  # (B,H,1,dn/dr)
+    q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
+    latent_t, k_rope_t = _mla_latent(params, x, cfg)  # (B,1,r), (B,1,dr)
+    k_rope_t = apply_rope(k_rope_t, pos[None], cfg.rope_theta)
+
+    latent = jax.lax.dynamic_update_slice_in_dim(cache["latent"], latent_t, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_t, pos, axis=1)
+
+    kv_b = params["kv_b"].reshape(r, H, dn + dv)
+    w_uk, w_uv = kv_b[..., :dn], kv_b[..., dn:]  # (r,H,dn), (r,H,dv)
+    # absorb the key up-projection into the query
+    q_abs = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)  # (B,H,1,r)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (
+        jnp.einsum("bhqr,bsr->bhqs", q_abs, latent)
+        + jnp.einsum("bhqd,bsd->bhqs", q_rope, k_rope)
+    ) * scale
+    S = latent.shape[1]
+    valid = jnp.arange(S) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bhqr", w, latent)  # (B,H,1,r)
+    o = jnp.einsum("bhqr,rhd->bhqd", o_lat, w_uv)  # (B,H,1,dv)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, H * dv)
+    return o @ params["w_o"], {"latent": latent, "k_rope": k_rope}

@@ -1,0 +1,133 @@
+"""Basic neural-net layers: norms, embeddings, rotary embeddings, MLPs.
+
+All layers follow a functional convention: ``init_*`` returns a parameter
+pytree (plain dicts of jnp arrays) and ``apply`` functions are pure.
+Parameter dictionaries use short, stable key names so that sharding rules
+(`repro.sharding.rules`) and the basis-rotation layout (`repro.core`) can
+pattern-match on them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in initialiser (LLM-standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, dim: int, dtype) -> dict:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if "bias" in params:  # LayerNorm
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(orig_dtype)
+
+
+def rms_norm_headwise(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    """Per-head RMS norm over the trailing head_dim (qk_norm)."""
+    orig = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply rotary embeddings.
+
+    x: (..., seq, head_dim); positions: (seq,) or broadcastable to x[..., :, 0].
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (head_dim//2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd//2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"embedding": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return params["embedding"][tokens].astype(dtype)
+
+
+def logits_from_head(head: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    # Compute logits in fp32 for numerical stability of the softmax/CE.
+    return x.astype(jnp.float32) @ head.astype(jnp.float32)

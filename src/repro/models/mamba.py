@@ -1,0 +1,157 @@
+"""Mamba (selective SSM) mixer — used by the Jamba hybrid architecture.
+
+Training uses a parallel associative scan over time (TPU-friendly: the
+recurrence h_t = A_t * h_{t-1} + b_t is a first-order linear scan, so
+``jax.lax.associative_scan`` turns it into a log-depth tree of elementwise
+ops). Decoding carries (conv_state, ssm_state) — O(1) memory per token, which
+is what makes the 500k-token decode shape feasible for hybrid models.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init
+
+
+def mamba_dims(d_model: int, cfg: SSMConfig) -> Tuple[int, int]:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, math.ceil(d_model / 16))
+    return d_inner, dt_rank
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, dt_rank = mamba_dims(d_model, cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation of A
+    A = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    # inverse softplus so that softplus(dt_bias) == dt_init
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, d_inner), dtype, 1.0 / math.sqrt(cfg.d_conv)),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * cfg.d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,d_inner); w: (d_conv, d_inner) depthwise causal conv."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(d_conv):  # d_conv is tiny (4): unrolled taps
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_scan(dA: jnp.ndarray, dBx: jnp.ndarray) -> jnp.ndarray:
+    """Associative scan of h_t = dA_t * h_{t-1} + dBx_t along axis 1 (time)."""
+
+    def combine(a, b):
+        a_l, b_l = a
+        a_r, b_r = b
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h
+
+
+# Chunk length for long sequences: the (B, S, d_inner, d_state) state tensor
+# is never materialised beyond one chunk; chunks are chained by a sequential
+# carry (h at chunk boundary) with rematerialisation in the backward pass.
+SSM_CHUNK = 1024
+
+
+def _ssm_scan_chunked(dA: jnp.ndarray, dBx: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Memory-bounded y = (scan(dA,dBx) . C): returns (B,S,d_inner)."""
+    B, S, D, N = dA.shape
+    if S <= SSM_CHUNK or S % SSM_CHUNK != 0:
+        h = _ssm_scan(dA, dBx)
+        return jnp.einsum("bsdn,bsn->bsd", h, C)
+    n_chunks = S // SSM_CHUNK
+
+    def reshape(x):
+        return jnp.moveaxis(x.reshape(B, n_chunks, SSM_CHUNK, *x.shape[2:]), 1, 0)
+
+    dA_c, dBx_c, C_c = reshape(dA), reshape(dBx), reshape(C)
+
+    def body(h0, args):
+        a, b, c = args
+        # prefix-scan within chunk, seeded by the carried boundary state
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        h = _ssm_scan(a, b)
+        y = jnp.einsum("bsdn,bsn->bsd", h, c)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, D, N), dA.dtype)
+    _, y = jax.lax.scan(jax.checkpoint(body), h0, (dA_c, dBx_c, C_c))
+    return jnp.moveaxis(y, 0, 1).reshape(B, S, D)
+
+
+def mamba_train(params: dict, u: jnp.ndarray, cfg: SSMConfig) -> jnp.ndarray:
+    B, S, d_model = u.shape
+    d_inner, dt_rank = mamba_dims(d_model, cfg)
+    xz = u @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_causal_depthwise_conv(x, params["conv_w"], params["conv_b"]))
+
+    proj = x @ params["x_proj"]
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])  # (d_inner, d_state)
+
+    dA = jnp.exp(dt[..., None] * A)  # (B,S,d_inner,d_state)
+    dBx = (dt * x.astype(jnp.float32))[..., None] * Bmat.astype(jnp.float32)[:, :, None, :]
+    y = _ssm_scan_chunked(dA, dBx, Cmat.astype(jnp.float32))
+    y = y + params["D"] * x.astype(jnp.float32)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, _ = mamba_dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(
+    params: dict, u: jnp.ndarray, cache: dict, cfg: SSMConfig
+) -> Tuple[jnp.ndarray, dict]:
+    """u: (B, 1, d_model) -> (y (B,1,d_model), new cache)."""
+    B, _, d_model = u.shape
+    d_inner, dt_rank = mamba_dims(d_model, cfg)
+    xz = u[:, 0] @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, d_inner)
+
+    conv_in = jnp.concatenate([cache["conv"], x[:, None, :]], axis=1)  # (B,d_conv,d_inner)
+    x = jnp.einsum("bcd,cd->bd", conv_in, params["conv_w"]) + params["conv_b"]
+    x = jax.nn.silu(x)
+    new_conv = conv_in[:, 1:]
+
+    proj = x @ params["x_proj"]
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B,d_inner,d_state)
+    dBx = (dt * x.astype(jnp.float32))[..., None] * Bmat.astype(jnp.float32)[:, None, :]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cmat.astype(jnp.float32)) + params["D"] * x.astype(jnp.float32)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    return (y @ params["out_proj"])[:, None, :], {"conv": new_conv, "ssm": h}

@@ -1,0 +1,114 @@
+"""Block-level composition: one decoder block = norm -> mixer -> norm -> MLP,
+where the mixer is attention (GQA/MLA), Mamba, mLSTM or sLSTM, and the MLP is
+dense, MoE, or absent (xLSTM blocks integrate their own feed-forward).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import xlstm as xl
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec) -> dict:
+    kn1, kmix, kn2, kmlp = jax.random.split(key, 4)
+    dtype = cfg.params_dtype
+    p = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(kmix, cfg.d_model, cfg.attention, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mb.init_mamba(kmix, cfg.d_model, cfg.ssm, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xl.init_mlstm(kmix, cfg.d_model, cfg.ssm, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xl.init_slstm(kmix, cfg.d_model, cfg.ssm, dtype)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer}")
+
+    if spec.mlp != "none":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if spec.mlp == "moe":
+            p["mlp"] = init_moe(kmlp, cfg.d_model, cfg.d_ff, cfg.moe, cfg.mlp_act, dtype)
+        else:
+            p["mlp"] = init_mlp(kmlp, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def block_train(
+    params: dict, x: jnp.ndarray, cfg: ModelConfig, spec: BlockSpec
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x)
+    if spec.mixer == "attn":
+        h = attn.gqa_train(params["mixer"], h, cfg.attention) if cfg.attention.kind == "gqa" \
+            else attn.mla_train(params["mixer"], h, cfg.attention)
+    elif spec.mixer == "mamba":
+        h = mb.mamba_train(params["mixer"], h, cfg.ssm)
+    elif spec.mixer == "mlstm":
+        h = xl.mlstm_train(params["mixer"], h, cfg.ssm)
+    else:  # slstm
+        h = xl.slstm_train(params["mixer"], h, cfg.ssm)
+    x = x + h
+
+    if spec.mlp != "none":
+        h = apply_norm(params["norm2"], x)
+        if spec.mlp == "moe":
+            h, aux = apply_moe(params["mlp"], h, cfg.moe)
+        else:
+            h = apply_mlp(params["mlp"], h)
+        x = x + h
+    return x, aux
+
+
+def init_block_cache(
+    cfg: ModelConfig, spec: BlockSpec, batch: int, seq_len: int, dtype
+) -> dict:
+    if spec.mixer == "attn":
+        if cfg.attention.kind == "mla":
+            return attn.init_mla_cache(batch, seq_len, cfg.attention, dtype)
+        return attn.init_gqa_cache(batch, seq_len, cfg.attention, dtype)
+    if spec.mixer == "mamba":
+        return mb.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    if spec.mixer == "mlstm":
+        return xl.init_mlstm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    return xl.init_slstm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+
+
+def block_decode(
+    params: dict,
+    x: jnp.ndarray,
+    cache: dict,
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+) -> Tuple[jnp.ndarray, dict]:
+    h = apply_norm(params["norm1"], x)
+    if spec.mixer == "attn":
+        if cfg.attention.kind == "mla":
+            h, cache = attn.mla_decode(params["mixer"], h, cache, pos, cfg.attention)
+        else:
+            h, cache = attn.gqa_decode(params["mixer"], h, cache, pos, cfg.attention)
+    elif spec.mixer == "mamba":
+        h, cache = mb.mamba_decode(params["mixer"], h, cache, cfg.ssm)
+    elif spec.mixer == "mlstm":
+        h, cache = xl.mlstm_decode(params["mixer"], h, cache, cfg.ssm)
+    else:
+        h, cache = xl.slstm_decode(params["mixer"], h, cache, cfg.ssm)
+    x = x + h
+
+    if spec.mlp != "none":
+        h = apply_norm(params["norm2"], x)
+        if spec.mlp == "moe":
+            h, _ = apply_moe(params["mlp"], h, cfg.moe)
+        else:
+            h = apply_mlp(params["mlp"], h)
+        x = x + h
+    return x, cache

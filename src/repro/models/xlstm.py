@@ -1,0 +1,236 @@
+"""xLSTM mixers: mLSTM (matrix memory, parallelisable) and sLSTM (scalar
+memory with true recurrence) — arXiv:2405.04517.
+
+mLSTM training uses the stabilised parallel (quadratic) formulation; decoding
+uses the O(1) recurrent form with a per-head matrix memory C in (dh x dh).
+sLSTM has a genuine sequential recurrence (block-diagonal recurrent weights),
+so training scans over time with ``jax.lax.scan``.
+
+Both carry a log-space stabiliser m to keep the exponential gating bounded,
+matching the reference implementation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(d_model: int, cfg: SSMConfig) -> Tuple[int, int]:
+    d_inner = int(cfg.proj_factor * d_model)
+    dh = d_inner // cfg.num_heads
+    return d_inner, dh
+
+
+def init_mlstm(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, dh = _mlstm_dims(d_model, cfg)
+    ks = jax.random.split(key, 8)
+    H = cfg.num_heads
+    return {
+        "up_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "w_q": dense_init(ks[1], (d_inner, d_inner), dtype),
+        "w_k": dense_init(ks[2], (d_inner, d_inner), dtype),
+        "w_v": dense_init(ks[3], (d_inner, d_inner), dtype),
+        "w_i": dense_init(ks[4], (d_inner, H), dtype),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[5], (d_inner, H), dtype),
+        # positive forget-gate bias => long memory at init
+        "b_f": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),
+        "skip_scale": jnp.ones((d_inner,), dtype),
+        "down_proj": dense_init(ks[6], (d_inner, d_model), dtype),
+    }
+
+
+def _mlstm_qkv_gates(params: dict, x: jnp.ndarray, cfg: SSMConfig):
+    """x: (B,S,d_inner) -> q,k,v (B,H,S,dh), log_i/log_f (B,H,S)."""
+    B, S, d_inner = x.shape
+    H = cfg.num_heads
+    dh = d_inner // H
+
+    def heads(y):
+        return y.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+
+    q = heads(x @ params["w_q"])
+    k = heads(x @ params["w_k"]) / math.sqrt(dh)
+    v = heads(x @ params["w_v"])
+    log_i = (x @ params["w_i"] + params["b_i"]).astype(jnp.float32).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        (x @ params["w_f"] + params["b_f"]).astype(jnp.float32)
+    ).transpose(0, 2, 1)
+    return q, k, v, log_i, log_f
+
+
+MLSTM_QUERY_BLOCK = 1024
+MLSTM_CHUNK_THRESHOLD = 8192
+
+
+def _mlstm_parallel_block(q, k, v, log_i, F, offset, S):
+    """One query block of the stabilised parallel mLSTM form.
+
+    q: (B,H,Sq,dh); k,v: (B,H,S,dh); log_i,F: (B,H,S); offset: block start.
+    D[i,j] = F_i - F_j + log_i_j for j <= i.
+    """
+    Sq = q.shape[2]
+    Fq = jax.lax.dynamic_slice_in_dim(F, offset, Sq, axis=2)
+    D = Fq[..., :, None] - F[..., None, :] + log_i[..., None, :]
+    i = offset + jnp.arange(Sq)[:, None]
+    j = jnp.arange(S)[None, :]
+    D = jnp.where(j <= i, D, NEG_INF)
+    m = jnp.max(D, axis=-1)  # (B,H,Sq) row stabiliser
+    Dstab = jnp.exp(D - m[..., None])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    Sw = scores * Dstab
+    n = jnp.maximum(jnp.abs(jnp.sum(Sw, axis=-1)), jnp.exp(-m))
+    return jnp.einsum("bhqk,bhkd->bhqd", Sw / n[..., None], v.astype(jnp.float32))
+
+
+def mlstm_train(params: dict, u: jnp.ndarray, cfg: SSMConfig) -> jnp.ndarray:
+    B, S, d_model = u.shape
+    xz = u @ params["up_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, x, cfg)
+    F = jnp.cumsum(log_f, axis=-1)  # (B,H,S): sum_{t<=i} log f_t
+
+    if S <= MLSTM_CHUNK_THRESHOLD or S % MLSTM_QUERY_BLOCK != 0:
+        h = _mlstm_parallel_block(q, k, v, log_i, F, 0, S)
+    else:
+        nblk = S // MLSTM_QUERY_BLOCK
+        dh = q.shape[-1]
+        qb = jnp.moveaxis(q.reshape(B, q.shape[1], nblk, MLSTM_QUERY_BLOCK, dh), 2, 0)
+
+        def body(_, args):
+            blk_q, offset = args
+            return None, _mlstm_parallel_block(blk_q, k, v, log_i, F, offset, S)
+
+        offsets = jnp.arange(nblk) * MLSTM_QUERY_BLOCK
+        _, hb = jax.lax.scan(jax.checkpoint(body), None, (qb, offsets))
+        h = jnp.moveaxis(hb, 0, 2).reshape(B, q.shape[1], S, dh)
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, -1).astype(u.dtype)
+    h = h + params["skip_scale"] * x  # learnable skip, keeps signal at init
+    y = h * jax.nn.silu(z)
+    return y @ params["down_proj"]
+
+
+def init_mlstm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, dh = _mlstm_dims(d_model, cfg)
+    H = cfg.num_heads
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(
+    params: dict, u: jnp.ndarray, cache: dict, cfg: SSMConfig
+) -> Tuple[jnp.ndarray, dict]:
+    B, _, d_model = u.shape
+    xz = u @ params["up_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,1,d_inner)
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, x, cfg)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]  # (B,H,dh)
+    log_i, log_f = log_i[..., 0], log_f[..., 0]  # (B,H)
+
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    f_s = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = f_s[..., None] * cache["C"] + i_s[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = f_s * cache["n"] + i_s * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, -1).astype(u.dtype)
+    h = h + params["skip_scale"] * x
+    y = h * jax.nn.silu(z)
+    return y @ params["down_proj"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    H = cfg.num_heads
+    dh = d_model // H
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for the 4 gates (i, f, z, o) stacked on the last axis
+        "w_x": dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        # block-diagonal recurrent weights: per head (dh, 4*dh)
+        "w_r": dense_init(ks[1], (H, dh, 4 * dh), dtype, 1.0 / math.sqrt(dh)),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d_model,)), jnp.linspace(3.0, 6.0, d_model), jnp.zeros((2 * d_model,))]
+        ).astype(jnp.float32),
+        "out_norm": jnp.ones((d_model,), dtype),
+        "ff_up": dense_init(ks[2], (d_model, int(1.3 * d_model)), dtype),
+        "ff_down": dense_init(ks[3], (int(1.3 * d_model), d_model), dtype),
+    }
+
+
+def _slstm_cell(params: dict, cfg: SSMConfig, x_t: jnp.ndarray, state: dict):
+    """One sLSTM time step. x_t: (B, d_model)."""
+    B, d_model = x_t.shape
+    H = cfg.num_heads
+    dh = d_model // H
+    h_prev = state["h"]  # (B, d_model)
+    hH = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hH, params["w_r"]).reshape(B, 4 * d_model)
+    pre = (x_t @ params["w_x"] + rec).astype(jnp.float32) + params["bias"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(z_pre)
+    n = jnp.maximum(f_s * state["n"] + i_s, 1e-6)
+    h = jax.nn.sigmoid(o_pre) * (c / n)
+    new_state = {"h": h.astype(x_t.dtype), "c": c, "n": n, "m": m_new}
+    return new_state, h.astype(x_t.dtype)
+
+
+def init_slstm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_model), dtype),
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.full((batch, d_model), 1e-6, jnp.float32),
+        "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+    }
+
+
+def slstm_train(params: dict, u: jnp.ndarray, cfg: SSMConfig) -> jnp.ndarray:
+    B, S, d_model = u.shape
+    state0 = init_slstm_cache(B, d_model, cfg, u.dtype)
+
+    def step(state, x_t):
+        return _slstm_cell(params, cfg, x_t, state)
+
+    _, hs = jax.lax.scan(step, state0, u.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)  # (B,S,d)
+    h = h * params["out_norm"]
+    y = h + jax.nn.gelu(h @ params["ff_up"]) @ params["ff_down"]
+    return y
+
+
+def slstm_decode(
+    params: dict, u: jnp.ndarray, cache: dict, cfg: SSMConfig
+) -> Tuple[jnp.ndarray, dict]:
+    new_state, h = _slstm_cell(params, cfg, u[:, 0], cache)
+    h = h * params["out_norm"]
+    y = h + jax.nn.gelu(h @ params["ff_up"]) @ params["ff_down"]
+    return y[:, None, :], new_state

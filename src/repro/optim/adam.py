@@ -1,0 +1,117 @@
+"""Adam / AdamW / AdaSGD / async-Nesterov baselines.
+
+AdaSGD (Wang & Wiens 2020) applies one global adaptive scale — the paper uses
+it (Fig. 3) to show that coordinate-wise adaptivity, not adaptivity per se, is
+what basis misalignment breaks.
+
+The Nesterov baseline follows Ajanthan et al. (2025): Adam with a Nesterov
+look-ahead on the first moment (beta1 = 0.99 in the paper's setup), which
+partially anticipates the staleness of delayed gradients.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, Schedule, bias_correction
+
+
+def adam(
+    schedule: Schedule,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
+        m = jax.tree.map(
+            lambda g, mm: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+            grads, state["m"])
+        v = jax.tree.map(
+            lambda g, vv: beta2 * vv + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["v"])
+        updates = jax.tree.map(
+            lambda mm, vv, p: -lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            - (lr * weight_decay * p.astype(jnp.float32) if weight_decay else 0.0),
+            m, v, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adasgd(
+    schedule: Schedule,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Single global adaptive scale: v is the EMA of the mean squared grad."""
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jnp.zeros((), jnp.float32),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
+        n_total = sum(g.size for g in jax.tree.leaves(grads))
+        sq_mean = (
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+            / n_total
+        )
+        v = beta2 * state["v"] + (1 - beta2) * sq_mean
+        denom = jnp.sqrt(v / bc2) + eps
+        m = jax.tree.map(
+            lambda mm, g: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+            state["m"],
+            grads,
+        )
+        updates = jax.tree.map(lambda mm: -lr * (mm / bc1) / denom, m)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def nesterov_adam(
+    schedule: Schedule,
+    beta1: float = 0.99,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Adam with Nesterov-style look-ahead momentum (Ajanthan et al., 2025)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
+        m = jax.tree.map(
+            lambda g, mm: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+            grads, state["m"])
+        v = jax.tree.map(
+            lambda g, vv: beta2 * vv + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["v"])
+        # Nesterov look-ahead: one extra momentum application
+        updates = jax.tree.map(
+            lambda g, mm, vv: -lr
+            * ((beta1 * mm + (1 - beta1) * g.astype(jnp.float32)) / bc1)
+            / (jnp.sqrt(vv / bc2) + eps),
+            grads, m, v)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,69 @@
+"""Functional optimizer interface (optax-style GradientTransformation).
+
+An optimizer is a pair of pure functions:
+  * ``init(params) -> state``
+  * ``update(grads, state, params, step) -> (updates, new_state)``
+where ``updates`` are *additive* deltas (``params + updates``).
+
+All optimizers here keep their state as plain pytrees so they compose with
+pjit sharding, the delay-FIFO wrapper (`repro.pipeline.delay`), and
+checkpointing without special cases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]  # (grads, state, params, step)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(lr: float, total_steps: int, warmup_frac: float = 0.012) -> Schedule:
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = lr * (step + 1) / warmup
+        progress = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+def make_schedule(name: str, lr: float, total_steps: int, warmup_frac: float) -> Schedule:
+    if name == "cosine":
+        return warmup_cosine_schedule(lr, total_steps, warmup_frac)
+    return constant_schedule(lr)
+
+
+def bias_correction(beta: float, step: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 - beta ** (step.astype(jnp.float32) + 1.0)

@@ -1,0 +1,65 @@
+"""Delay-aware baselines: PipeDream-LR (stage-wise learning-rate scheduling,
+Yang et al. 2021) and Delay Compensation (Zheng et al. 2017, Fig. 19).
+
+Both take a per-leaf delay map (pytree of ints matching params) produced by
+`repro.pipeline.partition.delay_map`, mirroring how each pipeline stage knows
+its own delay in a real deployment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import adam
+from repro.optim.base import Optimizer, Schedule
+
+
+def pipedream_lr(
+    schedule: Schedule,
+    delays,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    power: float = 0.5,
+) -> Optimizer:
+    """Adam with per-stage LR discount lr_k = lr / (1 + tau_k)^power."""
+    inner = adam(schedule, beta1, beta2, eps)
+    scales = jax.tree.map(lambda t: (1.0 + float(t)) ** (-power), delays)
+
+    def update(grads, state, params, step, aux=None):
+        updates, state = inner.update(grads, state, params, step)
+        updates = jax.tree.map(lambda u, s: u * s, updates, scales)
+        return updates, state
+
+    return Optimizer(inner.init, update)
+
+
+def delay_compensation(
+    schedule: Schedule,
+    lam: float = 0.1,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """First-order Taylor compensation of stale gradients:
+
+        g_hat = g + lam * g * g * (w_t - w_{t-tau})
+
+    The diagonal empirical Fisher g*g approximates the Hessian. Requires the
+    stale weight snapshot via ``aux={"stale_params": ...}`` (provided by the
+    delay-FIFO wrapper when ``store_params=True``).
+    """
+    inner = adam(schedule, beta1, beta2, eps)
+
+    def update(grads, state, params, step, aux=None):
+        if aux is not None and "stale_params" in aux:
+            grads = jax.tree.map(
+                lambda g, p, ps: g
+                + lam * g * g * (p.astype(jnp.float32) - ps.astype(jnp.float32)),
+                grads,
+                params,
+                aux["stale_params"],
+            )
+        return inner.update(grads, state, params, step)
+
+    return Optimizer(inner.init, update)

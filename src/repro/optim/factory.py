@@ -1,0 +1,79 @@
+"""Build optimizers (paper method + all baselines) from OptimizerConfig,
+wiring in the pipeline partition's delay maps and the stage-aware frequency
+schedule."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.core.basis_rotation import basis_rotation_adam
+from repro.core.stage_aware import freqs_for_delays
+from repro.optim.adam import adam, adasgd, nesterov_adam
+from repro.optim.base import Optimizer, make_schedule
+from repro.optim.delay_aware import delay_compensation, pipedream_lr
+from repro.pipeline.delay import delayed_optimizer
+from repro.pipeline.partition import delay_tree, leaf_delays
+
+
+def build_optimizer(
+    ocfg: OptimizerConfig,
+    params: Any,
+    model_cfg: ModelConfig,
+    num_stages: int = 1,
+    apply_delay: bool = True,
+    use_kernels: bool = False,
+) -> Optimizer:
+    """Compose base optimizer + (optionally) the gradient-staleness wrapper.
+
+    ``apply_delay=False`` builds the bare optimizer for the distributed
+    runtime, where staleness is physical (pipeline schedule), not simulated.
+    """
+    sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps, ocfg.warmup_frac)
+    delays = leaf_delays(params, model_cfg, num_stages)
+    dtree = delay_tree(params, model_cfg, num_stages)
+
+    name = ocfg.name
+    if name in ("adam", "adamw", "pipedream"):
+        base = adam(sched, ocfg.beta1, ocfg.beta2, ocfg.eps, ocfg.weight_decay)
+    elif name == "adasgd":
+        base = adasgd(sched, ocfg.beta1, ocfg.beta2, ocfg.eps)
+    elif name == "nesterov":
+        base = nesterov_adam(sched, ocfg.nesterov_beta, ocfg.beta2, ocfg.eps)
+    elif name == "pipedream_lr":
+        base = pipedream_lr(sched, dtree, ocfg.beta1, ocfg.beta2, ocfg.eps)
+    elif name == "delay_compensation":
+        base = delay_compensation(sched, ocfg.dc_lambda, ocfg.beta1, ocfg.beta2, ocfg.eps)
+    elif name == "muon":
+        from repro.optim.muon import muon
+
+        base = muon(sched, beta2=ocfg.beta2, eps=ocfg.eps)
+    elif name == "scion":
+        from repro.optim.scion import scion
+
+        base = scion(sched)
+    elif name == "basis_rotation":
+        if ocfg.stage_aware and num_stages > 1:
+            freq = freqs_for_delays(
+                delays, num_stages, ocfg.rotation_freq, ocfg.stage_aware_reversed
+            )
+        else:
+            freq = ocfg.rotation_freq
+        base = basis_rotation_adam(
+            sched,
+            ocfg.beta1,
+            ocfg.beta2,
+            ocfg.eps,
+            source=ocfg.rotation_source,
+            geometry=ocfg.rotation_geometry,
+            freq=freq,
+            weight_decay=ocfg.weight_decay,
+            use_kernels=use_kernels,
+        )
+    else:
+        raise ValueError(f"unknown optimizer {name}")
+
+    if apply_delay and num_stages > 1:
+        base = delayed_optimizer(
+            base, delays, store_params=(name == "delay_compensation")
+        )
+    return base

@@ -1,0 +1,75 @@
+"""Muon (Jordan et al., 2024): momentum + Newton-Schulz orthogonalisation of
+2-D updates. Included for the paper's Table 3 comparison against
+preconditioned optimizers — Muon does NOT align with the Hessian eigenbasis,
+so the paper finds it less delay-robust than basis rotation / SOAP.
+Non-matrix parameters fall back to Adam.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import build_layout
+from repro.optim.base import Optimizer, Schedule, bias_correction
+
+
+def newton_schulz_orthogonalize(G: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
+    """Approximate UV^T of the SVD of G via the quintic Newton-Schulz iteration."""
+    a, b, c = 3.4445, -4.7750, 2.0315
+    X = G.astype(jnp.float32)
+    transpose = X.shape[-2] > X.shape[-1]
+    if transpose:
+        X = jnp.swapaxes(X, -1, -2)
+    X = X / (jnp.linalg.norm(X, axis=(-2, -1), keepdims=True) + 1e-7)
+    for _ in range(steps):
+        A = X @ jnp.swapaxes(X, -1, -2)
+        B = b * A + c * (A @ A)
+        X = a * X + B @ X
+    if transpose:
+        X = jnp.swapaxes(X, -1, -2)
+    return X
+
+
+def muon(
+    schedule: Schedule,
+    momentum: float = 0.95,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    ns_steps: int = 5,
+    min_dim: int = 8,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step, aux=None):
+        lr = schedule(step)
+        layout = build_layout(params, "bilateral", min_dim)
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        mflat = jax.tree_util.tree_leaves(state["m"])
+        vflat = jax.tree_util.tree_leaves(state["v"])
+        bc1, bc2 = bias_correction(momentum, step), bias_correction(beta2, step)
+        new_m, new_v, ups = [], [], []
+        for g, m, v, plan in zip(gflat, mflat, vflat, layout):
+            g = g.astype(jnp.float32)
+            m = momentum * m + (1 - momentum) * g
+            if plan.rotate:  # matrix parameter: orthogonalised momentum
+                o = newton_schulz_orthogonalize(m, ns_steps)
+                # scale like Muon: sqrt(max(m,n)) RMS-matching factor
+                scale = jnp.sqrt(jnp.maximum(g.shape[-2], g.shape[-1]) * 1.0) * 0.2
+                ups.append(-lr * scale * o)
+                new_v.append(v)
+            else:
+                v = beta2 * v + (1 - beta2) * jnp.square(g)
+                ups.append(-lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+                new_v.append(v)
+            new_m.append(m)
+        return (
+            jax.tree_util.tree_unflatten(gdef, ups),
+            {"m": jax.tree_util.tree_unflatten(gdef, new_m),
+             "v": jax.tree_util.tree_unflatten(gdef, new_v)},
+        )
+
+    return Optimizer(init, update)

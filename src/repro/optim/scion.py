@@ -1,0 +1,54 @@
+"""Scion (Pethick et al., 2025): stochastic conditional gradient / LMO-based
+optimizer with norm-constrained updates — the last preconditioned baseline in
+the paper's Table 3.
+
+Unconstrained variant: the update is the linear minimisation oracle of the
+momentum over a layer-appropriate norm ball:
+  * hidden matrices — spectral-norm ball: orthogonalised momentum (Newton-
+    Schulz) scaled by sqrt(d_out / d_in);
+  * embeddings / LM head / vectors — l1->linf ball: sign(momentum).
+Like Muon it does NOT align with the Hessian eigenbasis, so the paper finds
+it less delay-robust than basis rotation / SOAP (Table 3: 2.10x vs 1.27x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import build_layout
+from repro.optim.base import Optimizer, Schedule
+from repro.optim.muon import newton_schulz_orthogonalize
+
+
+def scion(
+    schedule: Schedule,
+    momentum: float = 0.9,
+    ns_steps: int = 5,
+    min_dim: int = 8,
+    sign_scale: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step, aux=None):
+        lr = schedule(step)
+        layout = build_layout(params, "bilateral", min_dim)
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        mflat = jax.tree_util.tree_leaves(state["m"])
+        new_m, ups = [], []
+        for g, m, plan in zip(gflat, mflat, layout):
+            g = g.astype(jnp.float32)
+            m = momentum * m + (1 - momentum) * g
+            if plan.rotate:  # hidden matrix: spectral-ball LMO
+                o = newton_schulz_orthogonalize(m, ns_steps)
+                scale = jnp.sqrt(g.shape[-2] / max(g.shape[-1], 1) + 0.0)
+                ups.append(-lr * scale * o)
+            else:  # embedding / head / vector: sign LMO (l1 -> linf)
+                ups.append(-lr * sign_scale * jnp.sign(m))
+            new_m.append(m)
+        return (
+            jax.tree_util.tree_unflatten(gdef, ups),
+            {"m": jax.tree_util.tree_unflatten(gdef, new_m)},
+        )
+
+    return Optimizer(init, update)

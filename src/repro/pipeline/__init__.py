@@ -1,0 +1,24 @@
+from repro.pipeline.delay import delayed_optimizer, max_delay
+from repro.pipeline.partition import (
+    delay_tree,
+    layer_to_stage,
+    leaf_delays,
+    leaf_stages,
+)
+from repro.pipeline.simulate import (
+    make_sim_train_step,
+    predict_weights,
+    run_sim_training,
+)
+
+__all__ = [
+    "delayed_optimizer",
+    "max_delay",
+    "delay_tree",
+    "layer_to_stage",
+    "leaf_delays",
+    "leaf_stages",
+    "make_sim_train_step",
+    "predict_weights",
+    "run_sim_training",
+]

@@ -1,0 +1,104 @@
+"""Deterministic gradient-staleness wrapper (weight-stashing semantics).
+
+In PipeDream with weight stashing, the gradient applied at step t on stage k
+was computed — forward AND backward — from the weights that stage held at
+step t - tau_k. A per-leaf FIFO of gradients of depth tau_k reproduces this
+exactly: push the fresh gradient, pop and apply the one from tau_k steps ago.
+During the first tau_k steps the queue yields zeros — the pipeline warm-up,
+where no update has arrived yet.
+
+This is the deterministic, single-program equivalent of the paper's
+virtual-stage simulation (Appendix D.2) and what the convergence benchmarks
+run on CPU. In the distributed runtime the same wrapper runs sharded: each
+stage's queue lives on that stage's devices, which is precisely weight
+stashing's memory footprint (linear in pipeline depth — paper Section 4.3).
+
+``store_params=True`` additionally queues parameter snapshots so
+delay-compensation (Zheng et al. 2017) can access w_{t-tau}.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def _push_pop(queue: jnp.ndarray, fresh: jnp.ndarray):
+    """queue: (tau, ...). Returns (oldest, new_queue)."""
+    oldest = queue[0]
+    new_q = jnp.concatenate([queue[1:], fresh[None].astype(queue.dtype)], axis=0)
+    return oldest, new_q
+
+
+def delayed_optimizer(
+    inner: Optimizer,
+    delays: Sequence[int],
+    store_params: bool = False,
+) -> Optimizer:
+    """Wrap ``inner`` so each leaf's gradient is applied tau leaf-steps late.
+
+    ``delays``: per-leaf ints ordered like ``jax.tree_util.tree_flatten``.
+    """
+    delays = [int(d) for d in delays]
+
+    def init(params):
+        flat, _ = jax.tree_util.tree_flatten(params)
+        assert len(flat) == len(delays), "delay list must match leaf count"
+        gq = [
+            jnp.zeros((d,) + p.shape, jnp.float32) if d > 0 else None
+            for p, d in zip(flat, delays)
+        ]
+        state = {"inner": inner.init(params), "grad_q": gq}
+        if store_params:
+            state["param_q"] = [
+                jnp.stack([p.astype(jnp.float32)] * d) if d > 0 else None
+                for p, d in zip(flat, delays)
+            ]
+        return state
+
+    def update(grads, state, params, step, aux=None):
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        delayed, new_gq = [], []
+        for g, q, d in zip(gflat, state["grad_q"], delays):
+            if d == 0:
+                delayed.append(g)
+                new_gq.append(None)
+            else:
+                old, nq = _push_pop(q, g)
+                delayed.append(old)
+                new_gq.append(nq)
+        delayed_tree = jax.tree_util.tree_unflatten(gdef, delayed)
+
+        inner_aux = dict(aux or {})
+        new_state = {"grad_q": new_gq}
+        if store_params:
+            pflat, _ = jax.tree_util.tree_flatten(params)
+            stale, new_pq = [], []
+            for p, q, d in zip(pflat, state["param_q"], delays):
+                if d == 0:
+                    stale.append(p)
+                    new_pq.append(None)
+                else:
+                    old, nq = _push_pop(q, p)
+                    stale.append(old)
+                    new_pq.append(nq)
+            inner_aux["stale_params"] = jax.tree_util.tree_unflatten(gdef, stale)
+            new_state["param_q"] = new_pq
+
+        try:
+            updates, inner_state = inner.update(
+                delayed_tree, state["inner"], params, step, aux=inner_aux or None
+            )
+        except TypeError:
+            updates, inner_state = inner.update(delayed_tree, state["inner"], params, step)
+        new_state["inner"] = inner_state
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def max_delay(delays: Sequence[int]) -> int:
+    return max([int(d) for d in delays] or [0])

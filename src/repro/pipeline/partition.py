@@ -1,0 +1,57 @@
+"""Layer -> pipeline-stage partition and per-parameter delay maps.
+
+PipeDream semantics (paper Section 2.3 / Theorem E.6): with K stages indexed
+k = 0..K-1, a parameter on stage k incurs gradient delay tau_k = K-1-k — the
+earliest stage is the most stale. The embedding lives with stage 0, the final
+norm / LM head with the last stage (matching the paper's setup where the
+first/last stages also hold embedding and head).
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.layout import path_str
+
+
+def layer_to_stage(num_layers: int, num_stages: int) -> List[int]:
+    """Contiguous equal split of layers over stages."""
+    assert num_stages >= 1
+    per = max(1, num_layers // num_stages)
+    return [min(l // per, num_stages - 1) for l in range(num_layers)]
+
+
+def stage_of_path(path: str, cfg: ModelConfig, num_stages: int) -> int:
+    """Stage index for a parameter path. Requires scan_layers=False for
+    per-layer resolution; stacked leaves get the stage of their first layer."""
+    l2s = layer_to_stage(cfg.num_layers, num_stages)
+    parts = path.split("/")
+    if parts[0] == "blocks":
+        idx = int(parts[1])
+        if cfg.scan_layers:
+            # stacked: leading axis spans superblocks; attribute to the stage
+            # of the pattern position's first occurrence (dry-run only).
+            return l2s[min(idx, cfg.num_layers - 1)]
+        return l2s[idx]
+    if parts[0] in ("embed", "pos_emb", "frontend_proj"):
+        return 0
+    # final_norm / lm_head
+    return num_stages - 1
+
+
+def leaf_stages(params: Any, cfg: ModelConfig, num_stages: int) -> List[int]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [stage_of_path(path_str(p), cfg, num_stages) for p, _ in flat]
+
+
+def leaf_delays(params: Any, cfg: ModelConfig, num_stages: int) -> List[int]:
+    """Per-leaf gradient delay tau = K-1-stage, ordered like tree_flatten."""
+    return [num_stages - 1 - s for s in leaf_stages(params, cfg, num_stages)]
+
+
+def delay_tree(params: Any, cfg: ModelConfig, num_stages: int) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    delays = leaf_delays(params, cfg, num_stages)
+    return jax.tree_util.tree_unflatten(treedef, delays)

@@ -1,0 +1,223 @@
+"""Single-program simulation of asynchronous pipeline-parallel training.
+
+This is the deterministic equivalent of the paper's virtual-stage setup
+(Appendix D.2): the delay pattern of a K-stage PipeDream pipeline is imposed
+exactly — per-stage gradient delay tau_k = K-1-k via the FIFO wrapper — while
+compute runs as one jitted program. Convergence behaviour (the paper's
+experimental subject) depends only on the delay pattern, so this reproduces
+Figures 2, 5-10 faithfully on CPU at reduced scale.
+
+Modes:
+  * weight stashing (default): gradient FIFO == stashed-weight semantics.
+  * weight prediction (PipeMare, Yang et al. 2021): the forward pass runs on
+    weights extrapolated tau steps ahead using the optimizer's momentum.
+  * no stashing (Gaunt et al. 2017): forward activations and backward
+    linearisation use *different* weight versions per stage — the gradient is
+    not the gradient of any single point. Implemented with a per-block
+    custom_vjp taking two parameter versions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.optim.base import Optimizer, apply_updates, clip_by_global_norm
+
+
+# ---------------------------------------------------------------------------
+# PipeMare-style weight prediction
+# ---------------------------------------------------------------------------
+
+
+def _find_moments(opt_state: Any) -> Optional[Dict]:
+    """Locate Adam-style (m, v) in possibly-wrapped optimizer state."""
+    if isinstance(opt_state, dict):
+        if "m" in opt_state and "v" in opt_state:
+            return {"m": opt_state["m"], "v": opt_state["v"]}
+        if "inner" in opt_state:
+            return _find_moments(opt_state["inner"])
+        if "leaves" in opt_state:
+            return {"leaves": opt_state["leaves"]}
+    return None
+
+
+def predict_weights(params, opt_state, delays_tree, lr, eps: float = 1e-8):
+    """w_hat = w - lr * tau * m / (sqrt(v) + eps): extrapolate tau steps ahead."""
+    mo = _find_moments(opt_state)
+    if mo is None:
+        return params
+    if "leaves" in mo:  # basis-rotation state: flat leaf list
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        dflat, _ = jax.tree_util.tree_flatten(delays_tree)
+        new = [
+            (p - lr * d * st["m"] / (jnp.sqrt(st["v"]) + eps)).astype(p.dtype)
+            if d > 0
+            else p
+            for p, st, d in zip(flat, mo["leaves"], dflat)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, new)
+    return jax.tree.map(
+        lambda p, m, v, d: (p - lr * d * m / (jnp.sqrt(v) + eps)).astype(p.dtype),
+        params,
+        mo["m"],
+        mo["v"],
+        delays_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# No-stash two-version gradients
+# ---------------------------------------------------------------------------
+
+
+def make_two_version_loss(cfg: ModelConfig) -> Callable:
+    """loss(params_fwd, params_bwd, batch): activations from params_fwd,
+    backward linearisation at params_bwd. Differentiate w.r.t. arg 1."""
+    from repro.models.model import _embed, _logits, _run_blocks_train, cross_entropy
+    from repro.models.layers import apply_norm
+    from repro.models.transformer import block_train
+
+    assert not cfg.scan_layers, "no-stash simulation requires scan_layers=False"
+
+    @jax.custom_vjp
+    def block2w(pf, pb, x, l):
+        y, _ = block_train(pf, x, cfg, cfg.pattern[l % len(cfg.pattern)])
+        return y
+
+    def block2w_fwd(pf, pb, x, l):
+        y, _ = block_train(pf, x, cfg, cfg.pattern[l % len(cfg.pattern)])
+        return y, (pf, pb, x, l)
+
+    def block2w_bwd(res, ct):
+        pf, pb, x, l = res
+        # linearise at the *backward-time* weights (version mismatch)
+        _, vjp = jax.vjp(
+            lambda p, xx: block_train(p, xx, cfg, cfg.pattern[l % len(cfg.pattern)])[0],
+            pb,
+            x,
+        )
+        dpb, dx = vjp(ct)
+        dpf = jax.tree.map(jnp.zeros_like, pf)
+        return dpf, dpb, dx, None
+
+    block2w.defvjp(block2w_fwd, block2w_bwd)
+
+    def loss2w(params_bwd, params_fwd, batch):
+        x = _embed(params_bwd, cfg, batch["tokens"])
+        if cfg.learnable_pos_emb:
+            x = x + params_bwd["pos_emb"][: x.shape[1]].astype(x.dtype)
+        for l in range(cfg.num_layers):
+            x = block2w(params_fwd["blocks"][l], params_bwd["blocks"][l], x, l)
+        x = apply_norm(params_bwd["final_norm"], x)
+        logits = _logits(params_bwd, cfg, x)
+        return cross_entropy(logits, batch["labels"])
+
+    return loss2w
+
+
+# ---------------------------------------------------------------------------
+# Train-step factory + driver
+# ---------------------------------------------------------------------------
+
+
+def make_sim_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    grad_clip: float = 1.0,
+    weight_prediction: bool = False,
+    delays_tree=None,
+    schedule=None,
+    no_stash: bool = False,
+):
+    loss2w = make_two_version_loss(cfg) if no_stash else None
+
+    def train_step(params, opt_state, fwd_hist, batch, step):
+        fwd_params = params
+        if weight_prediction and delays_tree is not None and schedule is not None:
+            fwd_params = predict_weights(params, opt_state, delays_tree, schedule(step))
+
+        if no_stash:
+            # forward runs on stage-stale snapshots, backward on current
+            # params — the version-mismatch pathology of stash-less PipeDream
+            loss, grads = jax.value_and_grad(loss2w)(params, fwd_hist, batch)
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                fwd_params, cfg, batch
+            )
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    # NOTE: no buffer donation — the simulator is CPU-scale and callers often
+    # reuse the same initial params across optimizer comparisons.
+    return jax.jit(train_step)
+
+
+def stale_forward_params(history, params, delays_tree):
+    """Per-leaf stale parameter tree: the leaf on the stage with delay tau
+    comes from the snapshot tau steps ago (its forward-time version)."""
+    if delays_tree is None or not history:
+        return params
+    pflat, treedef = jax.tree_util.tree_flatten(params)
+    dflat = jax.tree_util.tree_leaves(delays_tree)
+    hists = [jax.tree_util.tree_leaves(h) for h in history]  # oldest..newest
+    out = []
+    for i, (p, d) in enumerate(zip(pflat, dflat)):
+        # history[-1] == current params (appended after the step), so the
+        # version from d steps ago lives at history[-1-d]
+        age = min(int(d), len(hists) - 1)
+        out.append(hists[-1 - age][i] if age > 0 else p)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def run_sim_training(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    data_iter,
+    steps: int,
+    grad_clip: float = 1.0,
+    key=None,
+    params=None,
+    weight_prediction: bool = False,
+    delays_tree=None,
+    schedule=None,
+    no_stash: bool = False,
+    log_every: int = 0,
+) -> Tuple[Any, Any, List[float]]:
+    """Run `steps` simulated-async steps; returns (params, opt_state, losses)."""
+    from repro.models.model import init_model
+
+    if params is None:
+        params = init_model(key if key is not None else jax.random.PRNGKey(0), cfg)
+    opt_state = optimizer.init(params)
+    step_fn = make_sim_train_step(
+        cfg, optimizer, grad_clip, weight_prediction, delays_tree, schedule, no_stash
+    )
+    max_age = 0
+    if no_stash and delays_tree is not None:
+        max_age = max(int(d) for d in jax.tree_util.tree_leaves(delays_tree))
+    history: List = []
+    losses: List[float] = []
+    for t in range(steps):
+        batch = next(data_iter)
+        fwd_hist = (
+            stale_forward_params(history, params, delays_tree) if no_stash else 0
+        )
+        params, opt_state, loss, _ = step_fn(
+            params, opt_state, fwd_hist, batch, jnp.int32(t)
+        )
+        if no_stash and max_age:
+            history.append(params)
+            history = history[-(max_age + 1):]
+        losses.append(float(loss))
+        if log_every and t % log_every == 0:
+            print(f"  step {t:5d}  loss {losses[-1]:.4f}")
+    return params, opt_state, losses

@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    cache_pspecs,
+    generic_activation_pspec,
+    make_shardings,
+    opt_state_pspecs,
+    param_pspec,
+    params_pspecs,
+    tokens_pspec,
+)
+
+__all__ = [
+    "cache_pspecs",
+    "generic_activation_pspec",
+    "make_shardings",
+    "opt_state_pspecs",
+    "param_pspec",
+    "params_pspecs",
+    "tokens_pspec",
+]

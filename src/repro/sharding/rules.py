@@ -1,0 +1,241 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs per mesh.
+
+Scheme (MaxText-style, DESIGN.md §4):
+  * batch over ("pod", "data") — pure data parallel between pods;
+  * weights tensor-parallel over "model": attention q/k/v output dim, o input
+    dim, MLP hidden dim, MoE expert dim (or expert-hidden when the expert
+    count doesn't divide the axis), vocab dim for embedding/head;
+  * the "data" axis doubles as an FSDP axis for weights and optimizer state
+    (the second matrix dim is sharded over "data" when divisible) — required
+    to fit the 34B/236B configs;
+  * basis-rotation state: m/v follow the parameter; U/L live on the row space
+    (sharded like the rows), V/R on the column space.
+
+Every rule degrades to None when the dimension doesn't divide the axis size,
+so the same rules serve the 16x16 production mesh, the 2x16x16 multi-pod
+mesh, and single-device smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.layout import path_str
+
+# parameter-name classification -------------------------------------------------
+
+COL_SHARDED = (  # output dim (last) over "model"
+    "w_q",
+    "w_k",
+    "w_v",
+    "w_gate",
+    "w_up",
+    "q_a",
+    "q_b",
+    "kv_a",
+    "kv_b",
+    "in_proj",
+    "up_proj",
+    "x_proj",
+    "dt_proj",
+    "w_x",
+    "ff_up",
+    "w_i",
+    "w_f",
+)
+ROW_SHARDED = (  # input dim (second-to-last) over "model"
+    "w_o",
+    "w_down",
+    "out_proj",
+    "down_proj",
+    "ff_down",
+)
+EXPERT_SHARDED = ("w_gate_e", "w_up_e", "w_down_e")
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _axis(mesh_shape: Dict[str, int], name: str, dim: int) -> Optional[str]:
+    return name if name in mesh_shape and _div(dim, mesh_shape[name]) else None
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh_shape: Dict[str, int]) -> P:
+    """PartitionSpec for a parameter leaf."""
+    nd = len(shape)
+    leaf = path.split("/")[-1]
+    spec: List[Optional[Any]] = [None] * nd
+
+    def set_last2(row_axis, col_axis):
+        if nd >= 2:
+            spec[-2] = row_axis
+            spec[-1] = col_axis
+
+    if "embedding" in path:
+        # (V, d) or (K, V, d): vocab over model, d over data (FSDP)
+        if nd >= 2:
+            spec[-2] = _axis(mesh_shape, "model", shape[-2])
+            spec[-1] = _axis(mesh_shape, "data", shape[-1])
+    elif leaf == "lm_head":
+        set_last2(_axis(mesh_shape, "data", shape[-2]), _axis(mesh_shape, "model", shape[-1]))
+    elif leaf in EXPERT_SHARDED and nd >= 3:
+        e_ax = _axis(mesh_shape, "model", shape[-3])
+        if e_ax:  # expert parallelism
+            spec[-3] = e_ax
+            spec[-2] = _axis(mesh_shape, "data", shape[-2])
+        else:  # few experts: shard the expert-hidden dim instead
+            hid = -1 if leaf != "w_down_e" else -2
+            oth = -2 if leaf != "w_down_e" else -1
+            spec[hid] = _axis(mesh_shape, "model", shape[hid])
+            spec[oth] = _axis(mesh_shape, "data", shape[oth])
+    elif leaf in ROW_SHARDED and nd >= 2:
+        set_last2(_axis(mesh_shape, "model", shape[-2]), _axis(mesh_shape, "data", shape[-1]))
+    elif leaf in COL_SHARDED and nd >= 2:
+        set_last2(_axis(mesh_shape, "data", shape[-2]), _axis(mesh_shape, "model", shape[-1]))
+    elif leaf == "w_r" and nd >= 3:  # sLSTM block-diagonal recurrent (H, dh, 4dh)
+        spec[-1] = _axis(mesh_shape, "model", shape[-1])
+    elif leaf in ("A_log", "D", "conv_w", "conv_b", "dt_bias"):
+        # Mamba per-channel params: shard d_inner over model
+        for i, s in enumerate(shape):
+            ax = _axis(mesh_shape, "model", s)
+            if ax and s >= 64:
+                spec[i] = ax
+                break
+    # norms / biases / small vectors: replicated
+    return P(*spec)
+
+
+def params_pspecs(params: Any, mesh_shape: Dict[str, int]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_pspec(path_str(p), tuple(x.shape), mesh_shape) for p, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# optimizer state ---------------------------------------------------------------
+
+
+def rotation_state_pspec(
+    name: str, param_spec: P, shape: Tuple[int, ...], mesh_shape: Dict[str, int]
+) -> P:
+    """Spec for a basis-rotation state leaf given its parameter's spec."""
+    if name in ("m", "v"):
+        return param_spec
+    batch = list(param_spec[:-2]) if len(param_spec) >= 2 else []
+    batch += [None] * (len(shape) - 2 - len(batch))
+    if name in ("U", "L"):  # row space (m x m): shard rows over data (FSDP)
+        return P(*batch, _axis(mesh_shape, "data", shape[-2]), None)
+    if name in ("V", "R"):  # column space (n x n)
+        return P(*batch, _axis(mesh_shape, "data", shape[-2]), None)
+    return P()
+
+
+def opt_state_pspecs(opt_state_shapes: Any, params: Any, mesh_shape: Dict[str, int]) -> Any:
+    """Specs for any optimizer state produced by repro.optim / repro.core.
+
+    Works structurally: 'leaves' lists (basis rotation) map to the param
+    flatten order; m/v trees mirror the param tree; queues get the param spec
+    with a leading None.
+    """
+    pspecs = params_pspecs(params, mesh_shape)
+    pflat = jax.tree_util.tree_leaves(params)
+    sflat = jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def rec(state):
+        if state is None:
+            return None
+        if isinstance(state, dict):
+            if "leaves" in state and isinstance(state["leaves"], list):
+                out = dict(state)
+                out["leaves"] = [
+                    {
+                        k: rotation_state_pspec(k, spec, tuple(v.shape), mesh_shape)
+                        for k, v in leaf_state.items()
+                    }
+                    for leaf_state, spec in zip(state["leaves"], sflat)
+                ]
+                return out
+            if "m" in state and "v" in state:
+                out = dict(state)
+                out["m"] = pspecs
+                out["v"] = pspecs if not _is_scalar(state["v"]) else P()
+                for k in state:
+                    if k not in ("m", "v"):
+                        out[k] = rec(state[k])
+                return out
+            return {k: rec(v) for k, v in state.items()}
+        if isinstance(state, (list, tuple)):
+            # delay queues: leading FIFO dim + param spec
+            if len(state) == len(pflat):
+                out = [
+                    None if q is None else P(None, *spec)
+                    for q, spec in zip(state, sflat)
+                ]
+                return out if isinstance(state, list) else tuple(out)
+            t = [rec(x) for x in state]
+            return t if isinstance(state, list) else tuple(t)
+        return P()  # scalar leaf
+
+    return rec(opt_state_shapes)
+
+
+def _is_scalar(x) -> bool:
+    return hasattr(x, "shape") and x.shape == ()
+
+
+# inputs / caches ---------------------------------------------------------------
+
+
+def batch_axes(mesh_shape: Dict[str, int]) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+
+def tokens_pspec(batch: int, mesh_shape: Dict[str, int], extra_dims: int = 1) -> P:
+    axes = batch_axes(mesh_shape)
+    total = 1
+    for a in axes:
+        total *= mesh_shape[a]
+    b_ax = axes if _div(batch, total) else None
+    return P(b_ax, *([None] * extra_dims))
+
+
+def generic_activation_pspec(
+    shape: Tuple[int, ...], mesh_shape: Dict[str, int], batch_dim: int = 0
+) -> P:
+    """Shard batch over (pod,data) if divisible; largest remaining dim over model."""
+    spec: List[Optional[Any]] = [None] * len(shape)
+    axes = batch_axes(mesh_shape)
+    total = 1
+    for a in axes:
+        total *= mesh_shape[a]
+    if _div(shape[batch_dim], total):
+        spec[batch_dim] = axes
+    best, best_dim = None, -1
+    for i, s in enumerate(shape):
+        if i == batch_dim:
+            continue
+        if _div(s, mesh_shape.get("model", 0)) and s > best_dim:
+            best, best_dim = i, s
+    if best is not None:
+        spec[best] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache: Any, mesh_shape: Dict[str, int], stacked: bool = True) -> Any:
+    # stacked caches have a leading superblock axis: (L, B, ...) vs (B, ...)
+    bd = 1 if stacked else 0
+    return jax.tree.map(
+        lambda x: generic_activation_pspec(tuple(x.shape), mesh_shape, batch_dim=bd),
+        cache,
+    )
+
+
+def make_shardings(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

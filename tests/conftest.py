@@ -1,0 +1,17 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device (the dry-run, and only
+# the dry-run, forces 512 — in its own process). Keep jax defaults here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

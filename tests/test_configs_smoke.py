@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned architecture runs one forward/train step and one decode step on CPU,
+asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_config
+from repro.configs.catalog import shapes_for
+from repro.data import batches
+from repro.models import (
+    forward_decode,
+    init_cache,
+    init_model,
+    loss_fn,
+    param_count,
+)
+
+SMOKE_B, SMOKE_S = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + PAPER_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 2
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    assert param_count(params) > 0
+    batch = next(batches(cfg, SMOKE_B, SMOKE_S, seed=0))
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch
+    )
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert all(jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)), (
+        f"{arch}: non-finite grads"
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, SMOKE_B, SMOKE_S)
+    if cfg.num_codebooks > 1:
+        tok = jnp.zeros((SMOKE_B, 1, cfg.num_codebooks), jnp.int32)
+        want = (SMOKE_B, 1, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        tok = jnp.zeros((SMOKE_B, 1), jnp.int32)
+        want = (SMOKE_B, 1, cfg.vocab_size)
+    logits, new_cache = forward_decode(params, cfg, tok, cache, jnp.int32(0))
+    assert logits.shape == want
+    assert jnp.all(jnp.isfinite(logits)), f"{arch}: non-finite decode logits"
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned dimensions (never built)."""
+    cfg = get_config(arch)
+    expected = {
+        "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "qwen3_0_6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen1_5_0_5b": (24, 1024, 16, 16, 2816, 151936),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 14336, 65536),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 1536, 102400),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+    }[arch]
+    L, d, H, kv, dff, V = expected
+    assert cfg.num_layers == L and cfg.d_model == d and cfg.vocab_size == V
+    assert cfg.d_ff == dff
+    if cfg.ssm is not None and cfg.family == "ssm":
+        assert cfg.ssm.num_heads == H
+    else:
+        assert cfg.attention.num_heads == H
+        assert cfg.attention.num_kv_heads == kv
+    assert cfg.source, f"{arch}: missing citation"
+
+
+def test_moe_extras():
+    mix = get_config("mixtral_8x22b")
+    assert mix.moe.num_experts == 8 and mix.moe.top_k == 2
+    assert mix.attention.window == 4096  # SWA
+    ds = get_config("deepseek_v2_236b")
+    assert ds.moe.num_experts == 160 and ds.moe.top_k == 6 and ds.moe.num_shared == 2
+    assert ds.attention.kind == "mla" and ds.attention.kv_lora_rank == 512
+    jm = get_config("jamba_v0_1_52b")
+    assert jm.moe.num_experts == 16 and jm.moe.top_k == 2
+    mixers = [s.mixer for s in jm.pattern]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7  # 1:7
+
+
+def test_long_context_policy():
+    names = {a: [s.name for s in shapes_for(get_config(a))] for a in ARCH_IDS}
+    for a in ("mixtral_8x22b", "jamba_v0_1_52b", "xlstm_1_3b"):
+        assert "long_500k" in names[a], a
+    for a in ("llava_next_34b", "stablelm_1_6b", "qwen3_0_6b", "qwen1_5_0_5b",
+              "phi4_mini_3_8b", "musicgen_large", "deepseek_v2_236b"):
+        assert "long_500k" not in names[a], a
+    swa = get_config("phi4_mini_3_8b_swa")
+    assert swa.supports_long_context()  # beyond-paper SWA variant

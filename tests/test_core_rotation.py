@@ -1,0 +1,159 @@
+"""Core rotation machinery: power iteration, rotations, the optimizer's
+algebraic invariants, stage-aware frequencies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    basis_rotation_adam,
+    build_layout,
+    power_qr,
+    rotate,
+    rotated_fraction,
+    unrotate,
+)
+from repro.core.rotation import batched_eye, gram_left, gram_right, refresh_basis
+from repro.core.stage_aware import NEVER, budget, freqs_for_delays, stage_aware_freq
+from repro.optim import adam, constant_schedule
+
+
+def test_power_qr_orthonormal_and_converges():
+    key = jax.random.PRNGKey(0)
+    Q0 = jnp.linalg.qr(jax.random.normal(key, (16, 16)))[0]
+    A = Q0 @ jnp.diag(jnp.linspace(10, 0.1, 16)) @ Q0.T  # PSD, known eigvecs
+    U = jnp.eye(16)
+    for _ in range(60):
+        U = power_qr(A, U)
+    assert np.allclose(U.T @ U, np.eye(16), atol=1e-5)
+    # subspace alignment: |<u_i, q_i>| -> 1
+    overlap = jnp.abs(jnp.sum(U * Q0, axis=0))
+    assert float(jnp.min(overlap)) > 0.99
+
+
+def test_power_qr_batched():
+    key = jax.random.PRNGKey(1)
+    A = jax.random.normal(key, (3, 8, 8))
+    A = jnp.einsum("bij,bkj->bik", A, A)  # PSD batch
+    U = batched_eye(8, (3,))
+    U = power_qr(A, U)
+    eye_err = jnp.einsum("bji,bjk->bik", U, U) - jnp.eye(8)
+    assert float(jnp.max(jnp.abs(eye_err))) < 1e-5
+
+
+def test_rotate_unrotate_inverse():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (12, 20))
+    U = jnp.linalg.qr(jax.random.normal(key, (12, 12)))[0]
+    V = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3), (20, 20)))[0]
+    np.testing.assert_allclose(
+        np.asarray(unrotate(rotate(x, U, V), U, V)), np.asarray(x), atol=1e-5
+    )
+    # Frobenius norm preserved (orthogonality)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(rotate(x, U, V))), float(jnp.linalg.norm(x)), rtol=1e-5
+    )
+
+
+def test_identity_rotation_is_adam():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (16, 24)), "scale": jnp.ones((24,))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (16, 24)),
+             "scale": jnp.ones((24,)) * 0.1}
+    sched = constant_schedule(1e-2)
+    br, ad = basis_rotation_adam(sched, freq=0), adam(sched)
+    s1, s2 = br.init(params), ad.init(params)
+    for t in range(4):
+        u1, s1 = br.update(grads, s1, params, jnp.int32(t))
+        u2, s2 = ad.update(grads, s2, params, jnp.int32(t))
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), u1, u2)
+        assert max(jax.tree.leaves(d)) < 1e-6
+
+
+def test_rotation_equivariance():
+    """Basis rotation with the TRUE eigenbasis of a rotated quadratic matches
+    plain Adam on the axis-aligned version of the same problem."""
+    key = jax.random.PRNGKey(0)
+    d = 8
+    Q = jnp.linalg.qr(jax.random.normal(key, (d, d)))[0]
+    diag = jnp.linspace(10.0, 0.5, d)
+
+    # aligned problem: f(w) = 1/2 w^T D w ; rotated: g(x) = f(Q^T x)
+    w = jax.random.normal(jax.random.PRNGKey(1), (1, d))  # as a 1 x d matrix
+    x = w @ Q.T  # rotated iterate
+
+    sched = constant_schedule(0.1)
+    ad = adam(sched, beta1=0.0)
+    br = basis_rotation_adam(sched, beta1=0.0, freq=0, min_dim=1)
+    sa = ad.init({"w": w})
+    sb = br.init({"x": x})
+    # manually install the true eigenbasis (right rotation of the 1 x d
+    # iterate: x_tilde = x V with V = Q maps to the aligned coordinates)
+    sb["leaves"][0]["V"] = Q
+
+    for t in range(20):
+        gw = w * diag  # grad of aligned quadratic
+        gx = (x @ Q) * diag @ Q.T  # grad of rotated quadratic
+        uw, sa = ad.update({"w": gw}, sa, {"w": w}, jnp.int32(t))
+        ux, sb = br.update({"x": gx}, sb, {"x": x}, jnp.int32(t))
+        w = w + uw["w"]
+        x = x + ux["x"]
+        # the rotated trajectory tracks the aligned one exactly
+        np.testing.assert_allclose(np.asarray(x @ Q), np.asarray(w), atol=1e-4)
+
+
+def test_layout_exclusions_and_sides():
+    params = {
+        "embed": {"embedding": jnp.zeros((64, 16))},
+        "lm_head": jnp.zeros((16, 64)),
+        "blocks": [{"norm1": {"scale": jnp.zeros((16,))},
+                    "mixer": {"w_q": jnp.zeros((16, 32)), "b_q": jnp.zeros((32,))},
+                    "mlp": {"w_down": jnp.zeros((32, 16))}}],
+    }
+    lay = {p.path: p for p in build_layout(params, "unilateral")}
+    assert not lay["embed/embedding"].rotate
+    assert not lay["lm_head"].rotate
+    assert not lay["blocks/0/norm1/scale"].rotate
+    assert not lay["blocks/0/mixer/b_q"].rotate
+    wq = lay["blocks/0/mixer/w_q"]
+    assert wq.rotate and wq.left and not wq.right  # smaller dim = rows
+    wd = lay["blocks/0/mlp/w_down"]
+    assert wd.rotate and not wd.left and wd.right
+    bi = {p.path: p for p in build_layout(params, "bilateral")}
+    assert bi["blocks/0/mixer/w_q"].left and bi["blocks/0/mixer/w_q"].right
+    frac = rotated_fraction(params, build_layout(params, "bilateral"))
+    assert 0.0 < frac < 1.0
+
+
+def test_refresh_sources_state():
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 12))
+    m = 0.5 * g
+    U, V = batched_eye(8, ()), batched_eye(12, ())
+    L, R = jnp.zeros((8, 8)), jnp.zeros((12, 12))
+    U2, V2, L2, R2 = refresh_basis(g, m, U, V, L, R, "2nd", 0.9)
+    assert float(jnp.max(jnp.abs(L2 - 0.1 * gram_left(g)))) < 1e-5
+    assert float(jnp.max(jnp.abs(R2 - 0.1 * gram_right(g)))) < 1e-5
+    U1, V1, L1, R1 = refresh_basis(g, m, U, V, None, None, "1st", 0.9)
+    assert L1 is None and R1 is None  # no Fisher state for S=1st
+
+
+def test_stage_aware_rule():
+    P, f0 = 8, 10
+    freqs = [stage_aware_freq(tau, P, f0) for tau in range(P)]
+    # most-delayed stages refresh most often
+    assert freqs[P - 1] < f0
+    # least-delayed stages never refresh
+    assert freqs[0] == NEVER and freqs[1] == NEVER
+    # monotone: more delay => more frequent (smaller period), among finite
+    finite = [f for f in freqs if f < NEVER]
+    assert finite == sorted(finite, reverse=True)
+    # budget-normalised allocation never exceeds the uniform budget
+    norm = freqs_for_delays(list(range(P)), P, f0)
+    assert budget(norm, 1000) <= budget([f0] * P, 1000) + 1e-6
+
+
+def test_stage_aware_reversed_allocation():
+    delays = [3, 2, 1, 0]
+    fwd = freqs_for_delays(delays, 4, 10)
+    rev = freqs_for_delays(delays, 4, 10, reversed_allocation=True)
+    assert fwd == list(reversed(rev))

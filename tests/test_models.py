@@ -1,0 +1,298 @@
+"""Model substrate: train/decode consistency for every mixer family,
+chunked-vs-dense path equivalence, frontends, loss sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    AttentionConfig,
+    BlockSpec,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+)
+from repro.models import (
+    forward_decode,
+    forward_train,
+    init_cache,
+    init_model,
+    loss_fn,
+)
+
+B, S, V = 2, 16, 97
+
+
+def _decode_all(params, cfg, toks, steps=S):
+    cache = init_cache(cfg, B, steps)
+    outs = []
+    for t in range(steps):
+        lg, cache = forward_decode(params, cfg, toks[:, t : t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    return jnp.stack(outs, 1)
+
+
+def _consistency(cfg, rtol=2e-4, atol=2e-4):
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = forward_train(params, cfg, toks)
+    dec = _decode_all(params, cfg, toks)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=rtol, atol=atol)
+
+
+def test_gqa_consistency():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16,
+                                  qk_norm=True, qkv_bias=True),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    _consistency(cfg)
+
+
+def test_swa_ring_buffer_consistency():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16, window=6),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    _consistency(cfg)
+
+
+def test_mla_consistency():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        attention=AttentionConfig(kind="mla", num_heads=4, kv_lora_rank=32,
+                                  q_lora_rank=48, qk_nope_head_dim=16,
+                                  qk_rope_head_dim=8, v_head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    _consistency(cfg)
+
+
+def test_mamba_consistency():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        ssm=SSMConfig(kind="mamba", d_state=8, d_conv=4, expand=2),
+        pattern=(BlockSpec("mamba", "dense"),),
+    )
+    _consistency(cfg, rtol=1e-3, atol=1e-3)
+
+
+def test_xlstm_consistency():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=0, vocab_size=V,
+        ssm=SSMConfig(kind="mlstm", num_heads=4, proj_factor=2.0),
+        pattern=(BlockSpec("mlstm", "none"), BlockSpec("slstm", "none")),
+    )
+    _consistency(cfg, rtol=1e-3, atol=1e-3)
+
+
+def test_moe_train_runs_and_aux_positive():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        moe=MoEConfig(num_experts=4, top_k=2, num_shared=1, d_ff_expert=64),
+        pattern=(BlockSpec("attn", "moe"),),
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    loss, metrics = loss_fn(params, cfg, {"tokens": toks, "labels": toks})
+    assert jnp.isfinite(loss)
+    assert metrics["aux"] > 0
+
+
+def test_moe_decode_matches_train_at_high_capacity():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=8.0),
+        pattern=(BlockSpec("attn", "moe"),),
+    )
+    _consistency(cfg, rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_attention_equals_dense(monkeypatch):
+    from repro.models import attention as attn_mod
+
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 8)
+    monkeypatch.setattr(attn_mod, "QUERY_BLOCK", 8)
+    cfg = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16)
+    key = jax.random.PRNGKey(0)
+    params = attn_mod.init_attention(key, 64, cfg, jnp.float32)
+    x = jax.random.normal(key, (B, 32, 64))
+    chunked = attn_mod.gqa_train(params, x, cfg)
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 10_000)
+    dense = attn_mod.gqa_train(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_mamba_equals_dense(monkeypatch):
+    from repro.models import mamba as mb
+
+    key = jax.random.PRNGKey(0)
+    scfg = SSMConfig(kind="mamba", d_state=8, d_conv=4, expand=2)
+    params = mb.init_mamba(key, 32, scfg, jnp.float32)
+    u = jax.random.normal(key, (B, 32, 32))
+    monkeypatch.setattr(mb, "SSM_CHUNK", 8)
+    chunked = mb.mamba_train(params, u, scfg)
+    monkeypatch.setattr(mb, "SSM_CHUNK", 1 << 20)
+    dense = mb.mamba_train(params, u, scfg)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_mlstm_equals_dense(monkeypatch):
+    from repro.models import xlstm as xl
+
+    key = jax.random.PRNGKey(0)
+    scfg = SSMConfig(kind="mlstm", num_heads=4, proj_factor=2.0)
+    params = xl.init_mlstm(key, 32, scfg, jnp.float32)
+    u = jax.random.normal(key, (B, 32, 32))
+    monkeypatch.setattr(xl, "MLSTM_CHUNK_THRESHOLD", 8)
+    monkeypatch.setattr(xl, "MLSTM_QUERY_BLOCK", 8)
+    chunked = xl.mlstm_train(params, u, scfg)
+    monkeypatch.setattr(xl, "MLSTM_CHUNK_THRESHOLD", 10_000)
+    dense = xl.mlstm_train(params, u, scfg)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+def test_vlm_frontend_and_ignore_labels():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=V, family="vlm",
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+        frontend="vision", frontend_tokens=4, frontend_dim=32,
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    fr = jax.random.normal(jax.random.PRNGKey(2), (B, 4, 32))
+    labels = toks.at[:, :4].set(-100)  # ignored positions
+    loss, _ = loss_fn(params, cfg, {"tokens": toks, "labels": labels, "frontend": fr})
+    assert jnp.isfinite(loss)
+    logits, _ = forward_train(params, cfg, toks, fr)
+    assert logits.shape == (B, S, V)  # image positions trimmed
+
+
+def test_audio_multi_codebook():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=50, num_codebooks=4,
+        family="audio",
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S, 4), 0, 50)
+    logits, _ = forward_train(params, cfg, toks)
+    assert logits.shape == (B, S, 4, 50)
+    loss, _ = loss_fn(params, cfg, {"tokens": toks, "labels": toks})
+    assert jnp.isfinite(loss)
+
+
+def test_scan_vs_unstacked_equivalence():
+    """scan_layers=True/False compute the same function (different param
+    layout, same init keys => cannot compare params; compare via structure)."""
+    cfg = ModelConfig(
+        num_layers=4, d_model=32, d_ff=64, vocab_size=V,
+        attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    key = jax.random.PRNGKey(0)
+    stacked = init_model(key, cfg)
+    flat = init_model(key, cfg.replace(scan_layers=False))
+    # move the unstacked params into the stacked layout and compare outputs
+    restacked = jax.tree.map(lambda *xs: jnp.stack(xs), *flat["blocks"])
+    donor = dict(flat)
+    donor["blocks"] = (restacked,)
+    toks = jax.random.randint(key, (B, S), 0, V)
+    out1, _ = forward_train(donor, cfg, toks)
+    out2, _ = forward_train(flat, cfg.replace(scan_layers=False), toks)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ce_matches_dense():
+    """loss_chunk never changes the loss or gradients (beyond-paper opt)."""
+    from repro.models.model import loss_fn
+
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=97,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    p = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 97)
+    labels = toks.at[:, :5].set(-100)
+    batch = {"tokens": toks, "labels": labels}
+    l1, _ = loss_fn(p, cfg, batch)
+    for chunk in (16, 24):  # 24 exercises the tail-chunk path
+        l2, _ = loss_fn(p, cfg.replace(loss_chunk=chunk), batch)
+        assert abs(float(l1) - float(l2)) < 1e-5
+    g1 = jax.grad(lambda pp: loss_fn(pp, cfg, batch)[0])(p)
+    g2 = jax.grad(lambda pp: loss_fn(pp, cfg.replace(loss_chunk=16), batch)[0])(p)
+    d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), g1, g2)))
+    assert d < 1e-5
+
+
+def test_remat_policies_agree():
+    from repro.models.model import loss_fn
+
+    cfg = ModelConfig(
+        num_layers=4, d_model=64, d_ff=128, vocab_size=97,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),),
+    )
+    p = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 97)
+    batch = {"tokens": toks, "labels": toks}
+    g1 = jax.grad(lambda pp: loss_fn(pp, cfg, batch)[0])(p)
+    g2 = jax.grad(lambda pp: loss_fn(pp, cfg.replace(remat_policy="dots"), batch)[0])(p)
+    d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), g1, g2)))
+    assert d < 1e-5
+
+
+def test_moe_dispatch_conservation():
+    """Routing invariant: with ample capacity, every token's MoE output equals
+    the gate-weighted sum of its experts' MLP outputs (hypothesis-style sweep
+    over seeds)."""
+    from repro.models.moe import _top_k_gates, apply_moe, init_moe
+    from repro.configs.base import MoEConfig
+
+    D, E = 16, 4
+    mcfg = MoEConfig(num_experts=E, top_k=2, d_ff_expert=32, capacity_factor=8.0)
+    params = init_moe(jax.random.PRNGKey(0), D, 32, mcfg, "swiglu", jnp.float32)
+    for seed in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, D))
+        y, _ = apply_moe(params, x, mcfg)
+        # manual dense computation
+        xt = x.reshape(-1, D)
+        logits = xt @ params["router"]
+        gates, _ = _top_k_gates(logits, 2)
+
+        def expert(e, t):
+            h = jax.nn.silu(t @ params["w_gate_e"][e]) * (t @ params["w_up_e"][e])
+            return h @ params["w_down_e"][e]
+
+        want = jnp.stack([
+            sum(gates[i, e] * expert(e, xt[i]) for e in range(E))
+            for i in range(xt.shape[0])
+        ]).reshape(x.shape)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens_but_stays_finite():
+    """At tiny capacity most tokens drop: output shrinks but remains finite
+    and the aux loss still registers load imbalance."""
+    from repro.models.moe import apply_moe, init_moe
+    from repro.configs.base import MoEConfig
+
+    D = 16
+    mcfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, capacity_factor=0.1)
+    params = init_moe(jax.random.PRNGKey(0), D, 32, mcfg, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, D))
+    y, aux = apply_moe(params, x, mcfg)
+    assert jnp.all(jnp.isfinite(y)) and jnp.isfinite(aux)
+    y_full, _ = apply_moe(
+        params, x, MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, capacity_factor=8.0)
+    )
+    # dropped tokens => strictly less routed mass
+    assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y_full))
