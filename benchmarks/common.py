@@ -24,9 +24,9 @@ from repro.configs.base import (
     OptimizerConfig,
 )
 from repro.data import batches
+from repro.engine import LoopConfig, SimEngine, run_loop
 from repro.models import init_model
 from repro.optim.factory import build_optimizer
-from repro.pipeline.simulate import run_sim_training
 
 BENCH_MODEL = ModelConfig(
     name="bench_lm",
@@ -67,10 +67,11 @@ def train_curve(
                            rotation_freq=okw.pop("rotation_freq", 5), **okw)
     params = init_model(jax.random.PRNGKey(seed), cfg)
     opt = build_optimizer(ocfg, params, cfg, num_stages=stages)
+    engine = SimEngine(cfg, opt)
+    state = engine.init_state(params=params)
     t0 = time.perf_counter()
-    _, _, losses = run_sim_training(
-        cfg, opt, batches(cfg, batch, seq, seed=seed), steps=steps, params=params
-    )
+    _, losses = run_loop(engine, batches(cfg, batch, seq, seed=seed),
+                         LoopConfig(steps=steps), state=state)
     dt = time.perf_counter() - t0
     return {"losses": losses, "us_per_step": 1e6 * dt / steps}
 

@@ -17,10 +17,13 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--quick", action="store_true",
                     help="reduced model (CI-sized), 60 steps")
+    ap.add_argument("--backend", default="sim", choices=["sim", "spmd"],
+                    help="sim: exact-delay simulation; spmd: shard_map runtime")
     args = ap.parse_args()
     cmd = [
         sys.executable, "-m", "repro.launch.train",
         "--arch", "paper_95m",
+        "--backend", args.backend,
         "--stages", "2" if args.quick else "8",  # smoke cfg has 2 layers
         "--optimizer", "basis_rotation",
         "--rotation-source", "2nd", "--rotation-geometry", "bilateral",

@@ -1,0 +1,33 @@
+"""Unified pipeline-training engine: one loop, pluggable backends.
+
+`SimEngine` runs the paper's deterministic virtual-stage simulation on one
+device; `SpmdEngine` runs the shard_map pipeline runtime with physical
+staleness. Both sit behind `PipelineEngine` and are driven by
+`engine.loop.run_loop` (see DESIGN.md §2).
+"""
+from repro.engine.base import EngineState, PipelineEngine
+from repro.engine.loop import LoopConfig, resume_if_present, run_loop
+from repro.engine.sim import SimEngine
+from repro.engine.spmd import (
+    SpmdEngine,
+    make_pipeline_grad,
+    make_pipeline_loss,
+    spmd_delay_specs,
+    stack_stage_params,
+    unstack_stage_params,
+)
+
+__all__ = [
+    "EngineState",
+    "PipelineEngine",
+    "LoopConfig",
+    "resume_if_present",
+    "run_loop",
+    "SimEngine",
+    "SpmdEngine",
+    "make_pipeline_grad",
+    "make_pipeline_loss",
+    "spmd_delay_specs",
+    "stack_stage_params",
+    "unstack_stage_params",
+]

@@ -1,0 +1,67 @@
+"""The `PipelineEngine` abstraction: one async-pipeline train-step contract,
+two interchangeable backends.
+
+* `SimEngine` (engine.sim) — the paper's virtual-stage simulation: compute is
+  one jitted single-device program, staleness is imposed exactly by the
+  per-leaf gradient FIFO (and, for no-stash mode, by stale forward snapshots).
+* `SpmdEngine` (engine.spmd) — the distributed runtime: a `shard_map` over a
+  `stage` mesh axis moves activations with ppermute, autodiff generates the
+  backward pipeline, and the same delay-FIFO wrapper applies PipeDream
+  weight-stashing staleness to the stage-sharded parameters.
+
+Both expose the same surface, so the single loop in `engine.loop` drives
+either backend (launch driver, benchmarks, examples, tests):
+
+    state = engine.init_state(params=..., key=...)
+    state, loss, metrics = engine.step(state, batch, t)
+
+`EngineState` is deliberately a plain container: `params` and `opt_state` are
+backend-specific pytrees (SPMD keeps the stage-stacked representation), and
+`history` is the sim backend's no-stash snapshot window. `checkpoint_tree` /
+`load_state` convert to/from the backend-agnostic `(params, opt_state)`
+payload the checkpointer stores.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class EngineState:
+    params: Any
+    opt_state: Any
+    history: List[Any] = field(default_factory=list)
+
+
+class PipelineEngine(abc.ABC):
+    """One asynchronous pipeline-parallel training runtime."""
+
+    name: str = "engine"
+
+    @abc.abstractmethod
+    def init_state(self, params: Any = None, key: Any = None) -> EngineState:
+        """Build the initial state (init the model when `params` is None)."""
+
+    @abc.abstractmethod
+    def step(
+        self, state: EngineState, batch: Dict, t: int
+    ) -> Tuple[EngineState, Any, Dict]:
+        """One optimizer step. Returns (new_state, loss, metrics)."""
+
+    # -- checkpointing -----------------------------------------------------
+
+    def checkpoint_tree(self, state: EngineState) -> Any:
+        """Backend-specific pytree handed to `save_checkpoint`."""
+        return (state.params, state.opt_state)
+
+    def load_state(self, tree: Any) -> EngineState:
+        """Rebuild an `EngineState` from `checkpoint_tree` output.
+
+        The no-stash history window is not checkpointed (matching the
+        pre-engine driver): after resume the first max-delay steps fall back
+        to the freshest snapshot available.
+        """
+        params, opt_state = tree
+        return EngineState(params=params, opt_state=opt_state)

@@ -1,0 +1,90 @@
+"""The single training loop shared by every driver.
+
+Previously the history / stale-params bookkeeping, checkpoint-resume,
+incremental-JSON metrics and logging lived in near-identical copies inside
+`launch/train.py`, `pipeline/simulate.py`, the benchmarks and the examples.
+They now live here once, driving any `PipelineEngine` backend.
+
+    engine = SimEngine(cfg, opt, ...)            # or SpmdEngine(...)
+    state, losses = run_loop(engine, data_iter, LoopConfig(steps=300))
+
+Checkpoint layout is unchanged from the pre-engine driver ((params,
+opt_state) + step in the manifest), so old checkpoints resume under the loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.engine.base import EngineState, PipelineEngine
+
+
+@dataclass
+class LoopConfig:
+    steps: int
+    log_every: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    out_path: Optional[str] = None
+    # constant metadata merged into the JSON metrics file (arch, optimizer...)
+    out_meta: Dict[str, Any] = field(default_factory=dict)
+
+
+def resume_if_present(
+    engine: PipelineEngine, state: EngineState, ckpt_dir: Optional[str]
+) -> Tuple[EngineState, int]:
+    """Replace `state` with the latest checkpoint under `ckpt_dir`, if any."""
+    if not ckpt_dir or not os.path.exists(os.path.join(ckpt_dir, "manifest.json")):
+        return state, 0
+    from repro.checkpoint import load_checkpoint
+
+    tree, step, _ = load_checkpoint(ckpt_dir)
+    return engine.load_state(tree), step
+
+
+def _write_metrics(
+    cfg: LoopConfig, losses: List[float], steps_done: int, start_step: int
+) -> None:
+    os.makedirs(os.path.dirname(cfg.out_path) or ".", exist_ok=True)
+    with open(cfg.out_path, "w") as f:  # incremental: survives interruption
+        # losses[i] is the loss at absolute step start_step + i (a resumed run
+        # only holds post-resume entries)
+        json.dump({**cfg.out_meta, "steps_done": steps_done,
+                   "start_step": start_step, "losses": losses}, f)
+
+
+def run_loop(
+    engine: PipelineEngine,
+    data_iter: Iterator[Dict],
+    cfg: LoopConfig,
+    state: Optional[EngineState] = None,
+    start_step: int = 0,
+    key: Any = None,
+) -> Tuple[EngineState, List[float]]:
+    """Run `cfg.steps` engine steps (from `start_step` when resuming)."""
+    from repro.checkpoint import save_checkpoint
+
+    if state is None:
+        state = engine.init_state(key=key)
+    losses: List[float] = []
+    t0 = time.time()
+    for t in range(start_step, cfg.steps):
+        batch = next(data_iter)
+        state, loss, metrics = engine.step(state, batch, t)
+        losses.append(float(loss))
+        if cfg.log_every and t % cfg.log_every == 0:
+            extra = f"  ce {float(metrics['ce']):.4f}" if "ce" in metrics else ""
+            print(f"step {t:5d}  loss {losses[-1]:.4f}{extra}"
+                  f"  ({time.time() - t0:.1f}s)")
+        if cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0:
+            save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=t + 1)
+        if cfg.out_path and (t + 1) % max(cfg.log_every, 1) == 0:
+            _write_metrics(cfg, losses, t + 1, start_step)
+    if cfg.ckpt_dir:
+        save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=cfg.steps)
+    if cfg.out_path:
+        _write_metrics(cfg, losses, cfg.steps, start_step)
+    return state, losses

@@ -20,10 +20,11 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType, NamedSharding  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import OptimizerConfig, get_config  # noqa: E402
+from repro.launch.mesh import make_mesh_compat, use_mesh  # noqa: E402
 from repro.launch.roofline import roofline_from_compiled  # noqa: E402
 from repro.models.model import init_model  # noqa: E402
 from repro.optim.base import apply_updates  # noqa: E402
@@ -45,13 +46,11 @@ def main():
     assert cfg.num_layers % K == 0
 
     if args.multi_pod:
-        mesh = jax.make_mesh((2, K, 16), ("pod", "stage", "data"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh_compat((2, K, 16), ("pod", "stage", "data"))
         data_axes = ("pod", "data")
         mb = 64  # per-microbatch global batch
     else:
-        mesh = jax.make_mesh((K, 16), ("stage", "data"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((K, 16), ("stage", "data"))
         data_axes = ("data",)
         mb = 32
 
@@ -87,32 +86,27 @@ def main():
     grad_fn = make_pipeline_grad(cfg, mesh, K, M, data_axis=data_axes if args.multi_pod else "data")
 
     # async step: pipeline grads + per-stage delayed basis-rotation update
-    ocfg = OptimizerConfig(name="basis_rotation", rotation_freq=10, total_steps=10_000)
-    # stage-stacked leaves: one delay per stage applied via the FIFO wrapper
-    flat_stage = jax.tree_util.tree_leaves(stacked_s)
-    delays = [K - 1] * len(flat_stage)  # conservative: deepest stage delay
+    # (same composition as SpmdEngine: exact per-stage tau via the diagonal
+    # FIFO, not the old uniform conservative K-1 delay)
     from repro.core.basis_rotation import basis_rotation_adam
     from repro.optim.base import make_schedule
-    from repro.pipeline.delay import delayed_optimizer
+    from repro.pipeline.delay import stage_delayed_optimizer
+    from repro.pipeline.spmd import spmd_delay_specs
 
     sched = make_schedule("cosine", 1e-3, 10_000, 0.012)
     base = basis_rotation_adam(sched, freq=10)
-    n_leaves = len(flat_stage) + len(jax.tree_util.tree_leaves(shared_s))
-    opt = delayed_optimizer(base, [K - 1] * n_leaves)
+    opt = stage_delayed_optimizer(base, spmd_delay_specs(stacked_s, shared_s, K), K)
 
     def train_step(stage_params, shared, opt_state, batch, step):
         loss, (gs, gsh) = grad_fn(stage_params, shared, batch)
         updates, opt_state = opt.update(
-            {"stage": gs, "shared": gsh}, opt_state,
-            {"stage": stage_params, "shared": shared}, step,
+            (gs, gsh), opt_state, (stage_params, shared), step,
         )
-        stage_params = apply_updates(stage_params, updates["stage"])
-        shared = apply_updates(shared, updates["shared"])
+        stage_params = apply_updates(stage_params, updates[0])
+        shared = apply_updates(shared, updates[1])
         return stage_params, shared, opt_state, loss
 
-    opt_state_s = jax.eval_shape(
-        opt.init, {"stage": stacked_s, "shared": shared_s}
-    )
+    opt_state_s = jax.eval_shape(opt.init, (stacked_s, shared_s))
 
     def anon_sharding(a):
         return jax.ShapeDtypeStruct(a.shape, a.dtype)
@@ -121,7 +115,7 @@ def main():
                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(train_step).lower(
             stage_sh, shared_sh, opt_in, batch, jax.ShapeDtypeStruct((), jnp.int32)
         )

@@ -1,27 +1,78 @@
-"""Production mesh construction.
+"""Production mesh construction + JAX version-compat shims.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — smoke tests must keep seeing 1 CPU device;
 only `dryrun.py` forces 512 host devices.
+
+``make_mesh_compat`` / ``use_mesh`` paper over the moving mesh API surface:
+``jax.sharding.AxisType`` and ``jax.set_mesh`` only exist on newer JAX
+releases, while older ones spell the context manager ``with mesh:``. Every
+mesh in the repo is built through these two helpers so a single site absorbs
+the version skew.
 """
 from __future__ import annotations
 
-from typing import Dict
+import contextlib
+from typing import Dict, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+
+def make_mesh_compat(shape: Tuple[int, ...], axis_names: Sequence[str]) -> Mesh:
+    """`jax.make_mesh` with Auto axis types where the installed JAX has them."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            tuple(shape), tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(axis_names),
+        )
+    except ImportError:
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    Newer JAX: `jax.set_mesh`; older: the Mesh object itself is the context
+    manager. (`jax.sharding.use_mesh` existed briefly in between.)
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext()  # pragma: no cover — future-proofing
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_smoke_mesh() -> Mesh:
     """Single-device mesh with the production axis names (for tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
+
+
+def make_pipeline_mesh(num_stages: int, data_parallel: int = 0) -> Mesh:
+    """(stage, data) mesh for the SPMD pipeline runtime.
+
+    ``data_parallel=0`` uses every visible device: data = n_devices // stages.
+    On CPU, force devices first (``--xla_force_host_platform_device_count``).
+    """
+    n = len(jax.devices())
+    if data_parallel <= 0:
+        if n % num_stages != 0:
+            raise ValueError(
+                f"{n} devices not divisible by {num_stages} pipeline stages"
+            )
+        data_parallel = n // num_stages
+    return make_mesh_compat((num_stages, data_parallel), ("stage", "data"))
 
 
 def mesh_shape_dict(mesh: Mesh) -> Dict[str, int]:

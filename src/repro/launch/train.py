@@ -1,9 +1,21 @@
-"""End-to-end training driver (single-host simulation of K-stage async
-pipeline parallelism — the paper's experimental setup).
+"""End-to-end training driver over the unified pipeline engine.
+
+Two backends behind the same loop (`repro.engine`):
+
+  * ``--backend sim``  (default): single-program simulation of K-stage async
+    pipeline parallelism — the paper's experimental setup. Staleness is
+    imposed exactly by the per-leaf gradient FIFO.
+  * ``--backend spmd``: the shard_map pipeline runtime — layers sharded over
+    a `stage` mesh axis, ppermute moving activations in a scanned fill-drain
+    schedule, and the per-stage delay FIFO applying PipeDream weight-stashing
+    staleness to the stage-stacked parameters. On a CPU-only host the driver
+    forces `--stages` host devices automatically; on accelerator machines
+    whose device count doesn't divide `--stages`, re-run with
+    ``JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=K``.
 
     PYTHONPATH=src python -m repro.launch.train \\
         --arch paper_95m --stages 8 --optimizer basis_rotation \\
-        --steps 300 --batch 8 --seq 256 --lr 1e-3
+        --steps 300 --batch 8 --seq 256 --lr 1e-3 [--backend spmd]
 
 Checkpoints land under --ckpt-dir every --ckpt-every steps and training
 resumes from the latest one if present.
@@ -11,28 +23,18 @@ resumes from the latest one if present.
 from __future__ import annotations
 
 import argparse
-import json
+import math
 import os
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.configs import OptimizerConfig, get_config
-from repro.data import batches
-from repro.models import init_model, param_count
-from repro.optim.base import make_schedule
-from repro.optim.factory import build_optimizer
-from repro.pipeline.partition import delay_tree
-from repro.pipeline.simulate import make_sim_train_step
 
 
-def main():
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper_95m")
     ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--backend", default="sim", choices=["sim", "spmd"])
     ap.add_argument("--stages", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="spmd backend: pipeline microbatches (default: stages)")
     ap.add_argument("--optimizer", default="basis_rotation")
     ap.add_argument("--rotation-source", default="2nd", choices=["1st", "2nd"])
     ap.add_argument("--rotation-geometry", default="bilateral",
@@ -41,6 +43,8 @@ def main():
     ap.add_argument("--stage-aware", action="store_true")
     ap.add_argument("--weight-prediction", action="store_true")
     ap.add_argument("--no-stash", action="store_true")
+    ap.add_argument("--sync", action="store_true",
+                    help="spmd backend: synchronous gradients (no delay FIFO)")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -50,18 +54,77 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=200)
     ap.add_argument("--out", default=None, help="write the loss curve as JSON")
-    args = ap.parse_args()
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.backend == "spmd":
+        if args.weight_prediction or args.no_stash:
+            raise SystemExit(
+                "--weight-prediction / --no-stash are sim-backend modes; "
+                "the spmd backend imposes weight-stashing staleness physically"
+            )
+        # the spmd backend needs `stages` devices; on CPU, force host devices
+        # BEFORE any jax device-state initialisation
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={args.stages}"
+            ).strip()
+
+    import jax
+
+    from repro.configs import OptimizerConfig, get_config
+    from repro.data import batches
+    from repro.engine import (
+        LoopConfig,
+        SimEngine,
+        SpmdEngine,
+        resume_if_present,
+        run_loop,
+    )
+    from repro.models import init_model, param_count
+    from repro.optim.base import make_schedule
+    from repro.optim.factory import build_optimizer
+    from repro.pipeline.partition import delay_tree
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    # the simulator needs per-layer leaves for per-stage delays
+    # both backends need per-layer leaves (per-stage delays / stage stacking)
     cfg = cfg.replace(scan_layers=False, dtype="float32", param_dtype="float32")
     if cfg.num_layers % args.stages != 0:
-        raise SystemExit(f"--stages {args.stages} must divide {cfg.num_layers} layers")
+        if args.smoke:
+            # pad the reduced config up to the nearest depth that both the
+            # pattern and the stage count divide — smoke runs exercise the
+            # machinery, not the exact layer count
+            layers = math.lcm(len(cfg.pattern), args.stages)
+            while layers < cfg.num_layers:
+                layers += math.lcm(len(cfg.pattern), args.stages)
+            print(f"smoke: padding {cfg.num_layers} layers -> {layers} "
+                  f"to divide {args.stages} stages")
+            cfg = cfg.replace(num_layers=layers)
+        else:
+            raise SystemExit(
+                f"--stages {args.stages} must divide {cfg.num_layers} layers"
+            )
+
+    if args.backend == "spmd":
+        # the flag above only helps the CPU backend; verify the topology that
+        # actually came up and fail with the remedy rather than a mesh error
+        n = len(jax.devices())
+        if n % args.stages != 0:
+            # the forced-host-device flag only affects the CPU platform (and
+            # only if it wasn't already set with a different count)
+            raise SystemExit(
+                f"spmd backend: {n} devices not divisible by --stages "
+                f"{args.stages}; re-run with JAX_PLATFORMS=cpu XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.stages}"
+            )
 
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
     print(f"arch={cfg.name} params={param_count(params):,} stages={args.stages} "
-          f"optimizer={args.optimizer}")
+          f"optimizer={args.optimizer} backend={args.backend}")
 
     ocfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
@@ -69,62 +132,41 @@ def main():
         rotation_geometry=args.rotation_geometry,
         rotation_freq=args.rotation_freq, stage_aware=args.stage_aware,
     )
-    opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages)
-    opt_state = opt.init(params)
-    sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps,
-                          ocfg.warmup_frac)
-    dtree = delay_tree(params, cfg, args.stages)
 
-    start_step = 0
-    if args.ckpt_dir and os.path.exists(os.path.join(args.ckpt_dir, "manifest.json")):
-        (params, opt_state), start_step, _ = load_checkpoint(args.ckpt_dir)
+    if args.backend == "spmd":
+        engine = SpmdEngine(
+            cfg, ocfg, num_stages=args.stages,
+            num_microbatches=args.microbatches, async_grads=not args.sync,
+        )
+    else:
+        opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages)
+        sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps,
+                              ocfg.warmup_frac)
+        dtree = delay_tree(params, cfg, args.stages)
+        engine = SimEngine(
+            cfg, opt, grad_clip=1.0,
+            weight_prediction=args.weight_prediction, delays_tree=dtree,
+            schedule=sched, no_stash=args.no_stash,
+        )
+
+    state = engine.init_state(params=params)
+    state, start_step = resume_if_present(engine, state, args.ckpt_dir)
+    if start_step:
         print(f"resumed from {args.ckpt_dir} at step {start_step}")
 
-    step_fn = make_sim_train_step(
-        cfg, opt, grad_clip=1.0,
-        weight_prediction=args.weight_prediction, delays_tree=dtree,
-        schedule=sched, no_stash=args.no_stash,
+    loop_cfg = LoopConfig(
+        steps=args.steps, log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        out_path=args.out,
+        out_meta={"arch": cfg.name, "optimizer": args.optimizer,
+                  "stages": args.stages, "backend": args.backend},
     )
     data = batches(cfg, args.batch, args.seq, seed=args.seed)
-    from repro.pipeline.simulate import stale_forward_params
-
-    max_age = max(int(d) for d in jax.tree_util.tree_leaves(dtree)) if args.no_stash else 0
-    history = []
-
-    losses = []
-    t0 = time.time()
-    for t in range(start_step, args.steps):
-        batch = next(data)
-        fwd_hist = (
-            stale_forward_params(history, params, dtree) if args.no_stash else 0
-        )
-        params, opt_state, loss, metrics = step_fn(
-            params, opt_state, fwd_hist, batch, jnp.int32(t)
-        )
-        if args.no_stash and max_age:
-            history.append(params)
-            history = history[-(max_age + 1):]
-        losses.append(float(loss))
-        if t % args.log_every == 0:
-            dt = time.time() - t0
-            print(f"step {t:5d}  loss {losses[-1]:.4f}  ce {float(metrics['ce']):.4f}"
-                  f"  ({dt:.1f}s)")
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, (params, opt_state), step=t + 1)
-        if args.out and (t + 1) % max(args.log_every, 1) == 0:
-            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-            with open(args.out, "w") as f:  # incremental: survives interruption
-                json.dump({"arch": cfg.name, "optimizer": args.optimizer,
-                           "stages": args.stages, "steps_done": t + 1,
-                           "losses": losses}, f)
-    if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, (params, opt_state), step=args.steps)
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump({"arch": cfg.name, "optimizer": args.optimizer,
-                       "stages": args.stages, "losses": losses}, f)
-    print(f"final loss {losses[-1]:.4f}")
+    for _ in range(start_step):  # resume: fast-forward past consumed batches
+        next(data)
+    _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
+    if losses:
+        print(f"final loss {losses[-1]:.4f}")
 
 
 if __name__ == "__main__":

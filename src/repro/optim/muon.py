@@ -14,17 +14,30 @@ from repro.optim.base import Optimizer, Schedule, bias_correction
 
 
 def newton_schulz_orthogonalize(G: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
-    """Approximate UV^T of the SVD of G via the quintic Newton-Schulz iteration."""
+    """Approximate UV^T of the SVD of G via the Newton-Schulz iteration.
+
+    The first five iterations use Jordan's tuned quintic coefficients, whose
+    fixed behaviour is an oscillation BAND around 1 (singular values land in
+    roughly [0.7, 1.2] — fast, but the residual plateaus near 0.3-0.4 and
+    never contracts further). Any additional steps therefore switch to the
+    classical cubic polynomial f(x) = 1.5x - 0.5x^3, which is a true
+    contraction toward 1 on (0, sqrt(3)) and polishes the band to
+    orthonormality quadratically. steps<=5 reproduces Muon's reference
+    behaviour exactly.
+    """
     a, b, c = 3.4445, -4.7750, 2.0315
     X = G.astype(jnp.float32)
     transpose = X.shape[-2] > X.shape[-1]
     if transpose:
         X = jnp.swapaxes(X, -1, -2)
     X = X / (jnp.linalg.norm(X, axis=(-2, -1), keepdims=True) + 1e-7)
-    for _ in range(steps):
+    for i in range(steps):
         A = X @ jnp.swapaxes(X, -1, -2)
-        B = b * A + c * (A @ A)
-        X = a * X + B @ X
+        if i < 5:
+            B = b * A + c * (A @ A)
+            X = a * X + B @ X
+        else:
+            X = 1.5 * X - 0.5 * (A @ X)
     if transpose:
         X = jnp.swapaxes(X, -1, -2)
     return X

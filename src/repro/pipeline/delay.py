@@ -100,5 +100,78 @@ def delayed_optimizer(
     return Optimizer(init, update)
 
 
+def stage_delayed_optimizer(
+    inner: Optimizer,
+    specs: Sequence,
+    num_stages: int,
+) -> Optimizer:
+    """Delay wrapper for the SPMD stage-stacked parameter layout.
+
+    ``specs`` is per-leaf (ordered like ``tree_flatten``): either an int delay
+    (shared/replicated leaves — identical to ``delayed_optimizer``) or the
+    string ``"stage"`` for leaves whose LEADING axis is the pipeline stage.
+
+    For a ``"stage"`` leaf of shape (K, ...), a FIFO of depth K-1 holds the
+    last K-1 full gradients; stage k pops the one from tau_k = K-1-k steps
+    ago, which after the push/pop algebra is exactly the DIAGONAL read
+    ``queue[k][k]`` (the last stage uses the fresh gradient). Sharded over the
+    `stage` mesh axis, each device materialises only its own (K-1, 1, ...)
+    queue slice — weight stashing's linear-in-depth footprint (paper §4.3).
+
+    During warm-up (t < tau_k) stage k receives zeros, matching the per-leaf
+    FIFO semantics of the simulator.
+    """
+    K = int(num_stages)
+    specs = list(specs)
+
+    def _q_shape(p, s):
+        if s == "stage":
+            return jnp.zeros((K - 1,) + p.shape, jnp.float32) if K > 1 else None
+        return jnp.zeros((int(s),) + p.shape, jnp.float32) if int(s) > 0 else None
+
+    def init(params):
+        flat, _ = jax.tree_util.tree_flatten(params)
+        assert len(flat) == len(specs), "delay-spec list must match leaf count"
+        return {
+            "inner": inner.init(params),
+            "grad_q": [_q_shape(p, s) for p, s in zip(flat, specs)],
+        }
+
+    def update(grads, state, params, step, aux=None):
+        gflat, gdef = jax.tree_util.tree_flatten(grads)
+        assert len(gflat) == len(specs), "delay-spec list must match leaf count"
+        delayed, new_gq = [], []
+        for g, q, s in zip(gflat, state["grad_q"], specs):
+            if q is None:
+                delayed.append(g)
+                new_gq.append(None)
+            elif s == "stage":
+                # pop: stage k reads the grad pushed K-1-k steps ago (row k),
+                # restricted to its own stage slice -> queue diagonal; one
+                # gather keeps the traced step O(1) in K
+                idx = jnp.arange(K - 1)
+                diag = q[idx, idx]
+                delayed.append(
+                    jnp.concatenate([diag, g[K - 1 :].astype(q.dtype)], axis=0)
+                )
+                new_gq.append(
+                    jnp.concatenate([q[1:], g[None].astype(q.dtype)], axis=0)
+                )
+            else:
+                old, nq = _push_pop(q, g)
+                delayed.append(old)
+                new_gq.append(nq)
+        delayed_tree = jax.tree_util.tree_unflatten(gdef, delayed)
+        try:
+            updates, inner_state = inner.update(
+                delayed_tree, state["inner"], params, step, aux=aux
+            )
+        except TypeError:
+            updates, inner_state = inner.update(delayed_tree, state["inner"], params, step)
+        return updates, {"inner": inner_state, "grad_q": new_gq}
+
+    return Optimizer(init, update)
+
+
 def max_delay(delays: Sequence[int]) -> int:
     return max([int(d) for d in delays] or [0])

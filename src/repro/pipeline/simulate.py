@@ -47,19 +47,35 @@ def _find_moments(opt_state: Any) -> Optional[Dict]:
 
 
 def predict_weights(params, opt_state, delays_tree, lr, eps: float = 1e-8):
-    """w_hat = w - lr * tau * m / (sqrt(v) + eps): extrapolate tau steps ahead."""
+    """w_hat = w - lr * tau * m / (sqrt(v) + eps): extrapolate tau steps ahead.
+
+    For basis-rotation state the momentum `m` lives in the ORIGINAL space but
+    the second moment `v` lives in the ROTATED space, so the Adam-style ratio
+    must be formed there: rotate m into the eigenbasis, divide by sqrt(v),
+    and rotate the step back — mirroring the optimizer's own update direction.
+    (Dividing original-space m by rotated-space v elementwise mixes bases and
+    produces an incoherent prediction.)
+    """
     mo = _find_moments(opt_state)
     if mo is None:
         return params
     if "leaves" in mo:  # basis-rotation state: flat leaf list
+        from repro.core.rotation import rotate, unrotate
+
         flat, treedef = jax.tree_util.tree_flatten(params)
         dflat, _ = jax.tree_util.tree_flatten(delays_tree)
-        new = [
-            (p - lr * d * st["m"] / (jnp.sqrt(st["v"]) + eps)).astype(p.dtype)
-            if d > 0
-            else p
-            for p, st, d in zip(flat, mo["leaves"], dflat)
-        ]
+        new = []
+        for p, st, d in zip(flat, mo["leaves"], dflat):
+            if d <= 0:
+                new.append(p)
+                continue
+            U, V = st.get("U"), st.get("V")
+            if U is not None or V is not None:
+                m_rot = rotate(st["m"], U, V)
+                step = unrotate(m_rot / (jnp.sqrt(st["v"]) + eps), U, V)
+            else:
+                step = st["m"] / (jnp.sqrt(st["v"]) + eps)
+            new.append((p - lr * d * step).astype(p.dtype))
         return jax.tree_util.tree_unflatten(treedef, new)
     return jax.tree.map(
         lambda p, m, v, d: (p - lr * d * m / (jnp.sqrt(v) + eps)).astype(p.dtype),
@@ -192,32 +208,20 @@ def run_sim_training(
     no_stash: bool = False,
     log_every: int = 0,
 ) -> Tuple[Any, Any, List[float]]:
-    """Run `steps` simulated-async steps; returns (params, opt_state, losses)."""
-    from repro.models.model import init_model
+    """Run `steps` simulated-async steps; returns (params, opt_state, losses).
 
-    if params is None:
-        params = init_model(key if key is not None else jax.random.PRNGKey(0), cfg)
-    opt_state = optimizer.init(params)
-    step_fn = make_sim_train_step(
+    Thin wrapper over the unified engine loop (`repro.engine`): builds a
+    `SimEngine` and drives it with `run_loop` — the step sequence (and hence
+    the fixed-seed loss curve) is unchanged from the pre-engine driver.
+    """
+    from repro.engine.loop import LoopConfig, run_loop
+    from repro.engine.sim import SimEngine
+
+    engine = SimEngine(
         cfg, optimizer, grad_clip, weight_prediction, delays_tree, schedule, no_stash
     )
-    max_age = 0
-    if no_stash and delays_tree is not None:
-        max_age = max(int(d) for d in jax.tree_util.tree_leaves(delays_tree))
-    history: List = []
-    losses: List[float] = []
-    for t in range(steps):
-        batch = next(data_iter)
-        fwd_hist = (
-            stale_forward_params(history, params, delays_tree) if no_stash else 0
-        )
-        params, opt_state, loss, _ = step_fn(
-            params, opt_state, fwd_hist, batch, jnp.int32(t)
-        )
-        if no_stash and max_age:
-            history.append(params)
-            history = history[-(max_age + 1):]
-        losses.append(float(loss))
-        if log_every and t % log_every == 0:
-            print(f"  step {t:5d}  loss {losses[-1]:.4f}")
-    return params, opt_state, losses
+    state = engine.init_state(params=params, key=key)
+    state, losses = run_loop(
+        engine, data_iter, LoopConfig(steps=steps, log_every=log_every), state=state
+    )
+    return state.params, state.opt_state, losses

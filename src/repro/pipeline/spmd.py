@@ -1,156 +1,20 @@
-"""Distributed pipeline parallelism as a `shard_map` over a `stage` mesh axis.
+"""Compatibility shim: the shard_map pipeline runtime moved under the engine
+subsystem (`repro.engine.spmd`, DESIGN.md §3) when the train loop was unified
+behind `PipelineEngine`. Import sites keep working through this module."""
+from repro.engine.spmd import (  # noqa: F401
+    SpmdEngine,
+    make_pipeline_grad,
+    make_pipeline_loss,
+    spmd_delay_specs,
+    stack_stage_params,
+    unstack_stage_params,
+)
 
-TPU adaptation of PipeDream (DESIGN.md §3): activations move between
-neighbouring stages with `jax.lax.ppermute` inside one jitted program; the
-backward pipeline is generated by autodiff through the ppermute schedule (the
-reverse permutation is exactly the backward activation-grad flow). Staleness
-(the async part) is applied by composing the resulting gradient with the
-per-stage delay FIFO (`repro.pipeline.delay`) — deterministic PipeDream
-weight-stashing semantics on SPMD hardware.
-
-The pipeline runtime targets homogeneous decoder stacks (the paper's models):
-layers are split contiguously into K equal stages, each device along the
-`stage` axis holds its stage's layer stack; embedding / final norm / LM head
-are replicated and only contribute on the first/last stage.
-"""
-from __future__ import annotations
-
-from functools import partial
-from typing import Any, Dict, Tuple
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.configs.base import ModelConfig
-from repro.models.layers import apply_norm
-from repro.models.model import _embed, _logits, cast_params, cross_entropy
-from repro.models.transformer import block_train
-
-
-def stack_stage_params(params: Dict, cfg: ModelConfig, num_stages: int) -> Tuple[Dict, Dict]:
-    """Split an unstacked model into (stage_stacked_blocks, shared).
-
-    stage_stacked leaves: (K, layers_per_stage, ...); shared = embedding,
-    positional embedding, final norm, LM head (replicated).
-    """
-    assert not cfg.scan_layers, "pipeline stacking starts from per-layer params"
-    L = cfg.num_layers
-    assert L % num_stages == 0, "layers must divide evenly across stages"
-    per = L // num_stages
-    blocks = params["blocks"]
-    # stack layers within a stage, then stack stages
-    stages = []
-    for k in range(num_stages):
-        layer_group = blocks[k * per : (k + 1) * per]
-        stages.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layer_group))
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
-    shared = {k: v for k, v in params.items() if k != "blocks"}
-    return stacked, shared
-
-
-def unstack_stage_params(stacked: Dict, shared: Dict, cfg: ModelConfig) -> Dict:
-    K = jax.tree.leaves(stacked)[0].shape[0]
-    per = jax.tree.leaves(stacked)[0].shape[1]
-    blocks = []
-    for k in range(K):
-        for l in range(per):
-            blocks.append(jax.tree.map(lambda x: x[k, l], stacked))
-    out = dict(shared)
-    out["blocks"] = tuple(blocks)
-    return out
-
-
-def make_pipeline_loss(
-    cfg: ModelConfig,
-    mesh: Mesh,
-    num_stages: int,
-    num_microbatches: int,
-    stage_axis: str = "stage",
-    data_axis: str = "data",
-):
-    """Returns loss_fn(stage_params, shared_params, batch) -> scalar.
-
-    batch: tokens/labels of shape (M, mb, S) sharded over data on dim 1.
-    """
-    M = num_microbatches
-    spec = cfg.pattern[0]
-
-    def stage_apply(wk, x):
-        # wk leaves: (per_stage_layers, ...); scan over the stage's layers
-        def body(h, w):
-            h, _ = block_train(w, h, cfg, spec)
-            return h, None
-
-        x, _ = jax.lax.scan(body, x, wk)
-        return x
-
-    def per_device(stage_params, shared, tokens, labels):
-        # stage_params leaves arrive as (1, per, ...) local slices
-        wk = cast_params(jax.tree.map(lambda x: x[0], stage_params), cfg.compute_dtype)
-        shared = cast_params(shared, cfg.compute_dtype)
-        k = jax.lax.axis_index(stage_axis)
-        K = num_stages
-        mb, S = tokens.shape[1], tokens.shape[2]
-
-        emb = _embed(shared, cfg, tokens)  # (M, mb, S, d)
-        if cfg.learnable_pos_emb:
-            emb = emb + shared["pos_emb"][:S].astype(emb.dtype)
-
-        d = emb.shape[-1]
-        zeros = jnp.zeros((mb, S, d), emb.dtype)
-        recv = zeros
-        out_buf = jnp.zeros((M, mb, S, d), emb.dtype)
-        fwd_perm = [(i, i + 1) for i in range(K - 1)]
-
-        for t in range(M + K - 1):
-            inject = emb[t] if t < M else zeros
-            inp = jnp.where(k == 0, inject, recv)
-            h = stage_apply(wk, inp)
-            # last stage collects the microbatch that finishes at tick t
-            mb_idx = t - (K - 1)
-            if 0 <= mb_idx < M:
-                out_buf = out_buf.at[mb_idx].set(
-                    jnp.where(k == K - 1, h, out_buf[mb_idx])
-                )
-            recv = jax.lax.ppermute(h, stage_axis, fwd_perm)
-
-        x = apply_norm(shared["final_norm"], out_buf)
-        logits = _logits(shared, cfg, x)  # (M, mb, S, V)
-        ce = cross_entropy(logits, labels)
-        is_last = (k == K - 1).astype(jnp.float32)
-        # only the last stage's loss is real; psum over stages, mean over the
-        # data axes (a tuple covers the multi-pod (pod, data) case)
-        loss = jax.lax.psum(ce * is_last, stage_axis)
-        loss = jax.lax.pmean(loss, data_axis)
-        return loss
-
-    from jax.experimental.shard_map import shard_map
-
-    ln = shard_map(
-        per_device,
-        mesh=mesh,
-        in_specs=(
-            P(stage_axis),  # stage params stacked on stage axis
-            P(),  # shared params replicated
-            P(None, data_axis, None),  # tokens (M, mb, S)
-            P(None, data_axis, None),
-        ),  # data_axis may be a tuple of mesh axes (multi-pod)
-        out_specs=P(),
-        check_rep=False,
-    )
-
-    def loss_fn(stage_params, shared, batch):
-        return ln(stage_params, shared, batch["tokens"], batch["labels"])
-
-    return loss_fn
-
-
-def make_pipeline_grad(cfg, mesh, num_stages, num_microbatches, **kw):
-    loss_fn = make_pipeline_loss(cfg, mesh, num_stages, num_microbatches, **kw)
-
-    def grad_fn(stage_params, shared, batch):
-        return jax.value_and_grad(loss_fn, argnums=(0, 1))(stage_params, shared, batch)
-
-    return grad_fn
+__all__ = [
+    "SpmdEngine",
+    "make_pipeline_grad",
+    "make_pipeline_loss",
+    "spmd_delay_specs",
+    "stack_stage_params",
+    "unstack_stage_params",
+]

@@ -48,6 +48,34 @@ def test_predict_weights_moves_against_momentum():
     np.testing.assert_allclose(np.asarray(pred0["w"]), 1.0)
 
 
+def test_predict_weights_rotated_state_coherent():
+    """PipeMare prediction under basis rotation: m must be rotated into the
+    eigenbasis before dividing by the rotated-space v, and the step rotated
+    back — the old elementwise original/rotated mix is a regression."""
+    n = 8
+    U = jnp.asarray(np.eye(n, dtype=np.float32)[::-1].copy())  # reversal perm
+    V = jnp.eye(n, dtype=jnp.float32)
+    m = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n) / 10.0
+    v = (jnp.arange(n * n, dtype=jnp.float32).reshape(n, n) % 7) + 1.0
+    p = jnp.ones((n, n), jnp.float32)
+    state = {"leaves": [{"m": m, "v": v, "U": U, "V": V}]}
+    pred = predict_weights({"w": p}, state, {"w": 3}, lr=0.01)
+    m_rot = U.T @ m @ V
+    want = p - 0.01 * 3 * (U @ (m_rot / (jnp.sqrt(v) + 1e-8)) @ V.T)
+    np.testing.assert_allclose(np.asarray(pred["w"]), np.asarray(want), rtol=1e-5)
+    # the basis-mixing formula gives a different (incoherent) answer here
+    mixed = p - 0.01 * 3 * m / (jnp.sqrt(v) + 1e-8)
+    assert float(jnp.max(jnp.abs(pred["w"] - mixed))) > 1e-3
+    # identity bases reduce to the plain Adam-style extrapolation
+    eye_state = {"leaves": [{"m": m, "v": v, "U": jnp.eye(n), "V": jnp.eye(n)}]}
+    pred_id = predict_weights({"w": p}, eye_state, {"w": 3}, lr=0.01)
+    np.testing.assert_allclose(np.asarray(pred_id["w"]), np.asarray(mixed), rtol=1e-5)
+    # non-rotated leaves (no U/V) keep the plain formula
+    plain_state = {"leaves": [{"m": m, "v": v}]}
+    pred_pl = predict_weights({"w": p}, plain_state, {"w": 3}, lr=0.01)
+    np.testing.assert_allclose(np.asarray(pred_pl["w"]), np.asarray(mixed), rtol=1e-5)
+
+
 def test_two_version_loss_gradients():
     """Same versions => identical to the plain gradient; different versions
     => a deliberately 'incorrect' gradient (no-stash pathology)."""

@@ -84,9 +84,10 @@ import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, json
 from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec
+from repro.launch.mesh import make_mesh_compat, use_mesh
 from repro.models import init_model
 from repro.models.model import loss_fn
-from repro.pipeline.spmd import stack_stage_params, make_pipeline_grad
+from repro.pipeline.spmd import stack_stage_params, make_pipeline_grad, make_pipeline_loss
 
 cfg = ModelConfig(num_layers=4, d_model=32, d_ff=64, vocab_size=64, max_seq_len=64,
                   attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
@@ -94,13 +95,12 @@ cfg = ModelConfig(num_layers=4, d_model=32, d_ff=64, vocab_size=64, max_seq_len=
 params = init_model(jax.random.PRNGKey(0), cfg)
 K, M = 4, 4
 stacked, shared = stack_stage_params(params, cfg, K)
-mesh = jax.make_mesh((K, 2), ("stage", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((K, 2), ("stage", "data"))
 toks = jax.random.randint(jax.random.PRNGKey(1), (M, 4, 16), 0, 64)
 labels = jax.random.randint(jax.random.PRNGKey(2), (M, 4, 16), 0, 64)
 batch = {"tokens": toks, "labels": labels}
 grad_fn = make_pipeline_grad(cfg, mesh, K, M)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     loss, (gs, gsh) = jax.jit(grad_fn)(stacked, shared, batch)
 flat = {"tokens": toks.reshape(-1, 16), "labels": labels.reshape(-1, 16)}
 (ref_loss, _), ref_g = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, flat)
@@ -108,7 +108,26 @@ re_stacked, _ = stack_stage_params({**{k: v for k, v in ref_g.items()}}, cfg, K)
 d_blocks = max(jax.tree.leaves(jax.tree.map(
     lambda a, b: float(jnp.max(jnp.abs(a - b))), gs, re_stacked)))
 d_loss = abs(float(loss) - float(ref_loss))
-print(json.dumps({"d_loss": d_loss, "d_blocks": d_blocks}))
+
+def n_eqns(jaxpr):
+    total = len(jaxpr.eqns)
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            if hasattr(v, "jaxpr"):
+                total += n_eqns(v.jaxpr)
+            elif hasattr(v, "eqns"):
+                total += n_eqns(v)
+    return total
+
+# scanned schedule: trace size must not grow with microbatch count
+sizes = []
+for m in (4, 16):
+    lf = make_pipeline_loss(cfg, mesh, K, m)
+    b = {"tokens": jnp.zeros((m, 4, 16), jnp.int32),
+         "labels": jnp.zeros((m, 4, 16), jnp.int32)}
+    sizes.append(n_eqns(jax.make_jaxpr(lf)(stacked, shared, b).jaxpr))
+print(json.dumps({"d_loss": d_loss, "d_blocks": d_blocks,
+                  "eqns_m4": sizes[0], "eqns_m16": sizes[1]}))
 """
 
 
@@ -124,6 +143,8 @@ def test_spmd_pipeline_matches_reference():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["d_loss"] < 1e-4
     assert res["d_blocks"] < 1e-4
+    # jaxpr size constant in num_microbatches (lax.scan schedule, no unroll)
+    assert res["eqns_m16"] == res["eqns_m4"]
 
 
 def test_dryrun_smoke_subprocess():
@@ -149,53 +170,29 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, json
-from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec
+from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec, OptimizerConfig
 from repro.data import batches
-from repro.models import init_model
-from repro.optim.base import apply_updates, constant_schedule
-from repro.core.basis_rotation import basis_rotation_adam
-from repro.pipeline.delay import delayed_optimizer
-from repro.pipeline.spmd import stack_stage_params, make_pipeline_grad
+from repro.engine import SpmdEngine, LoopConfig, run_loop
+from repro.launch.mesh import make_mesh_compat
 
 cfg = ModelConfig(num_layers=4, d_model=32, d_ff=64, vocab_size=64, max_seq_len=64,
                   attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
                   pattern=(BlockSpec("attn","dense"),), scan_layers=False)
-params = init_model(jax.random.PRNGKey(0), cfg)
 K, M = 4, 4
-stacked, shared = stack_stage_params(params, cfg, K)
-mesh = jax.make_mesh((K, 2), ("stage", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-grad_fn = make_pipeline_grad(cfg, mesh, K, M)
-
-base = basis_rotation_adam(constant_schedule(3e-3), freq=5)
-n_leaves = len(jax.tree_util.tree_leaves((stacked, shared)))
-opt = delayed_optimizer(base, [K - 1] * n_leaves)
-state = opt.init((stacked, shared))
-
-@jax.jit
-def step(stacked, shared, state, batch, t):
-    loss, (gs, gsh) = grad_fn(stacked, shared, batch)
-    updates, state = opt.update((gs, gsh), state, (stacked, shared), t)
-    stacked = apply_updates(stacked, updates[0])
-    shared = apply_updates(shared, updates[1])
-    return stacked, shared, state, loss
-
-data = batches(cfg, M * 4, 16, seed=0)
-losses = []
-with jax.set_mesh(mesh):
-    for t in range(25):
-        b = next(data)
-        batch = {"tokens": b["tokens"].reshape(M, 4, 16),
-                 "labels": b["labels"].reshape(M, 4, 16)}
-        stacked, shared, state, loss = step(stacked, shared, state, batch, jnp.int32(t))
-        losses.append(float(loss))
+mesh = make_mesh_compat((K, 2), ("stage", "data"))
+ocfg = OptimizerConfig(name="basis_rotation", learning_rate=3e-3, total_steps=25,
+                       rotation_freq=5, schedule="constant")
+engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=M, mesh=mesh)
+state = engine.init_state(key=jax.random.PRNGKey(0))
+state, losses = run_loop(engine, batches(cfg, M * 4, 16, seed=0),
+                         LoopConfig(steps=25), state=state)
 print(json.dumps({"first": losses[0], "last": sum(losses[-5:]) / 5}))
 """
 
 
 def test_spmd_pipeline_async_training_converges():
-    """End-to-end: shard_map pipeline grads + per-stage delayed basis-rotation
-    updates — the full distributed async recipe — reduces the loss."""
+    """End-to-end: the SpmdEngine — shard_map pipeline grads + per-stage
+    delayed basis-rotation updates under the shared loop — reduces the loss."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# optional dependency (the `test` extra in pyproject.toml): skip this module
+# instead of aborting the whole collection when hypothesis is absent
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.rotation import power_qr
 from repro.core.theory import effective_delay, norm_11, rotated_hessian
