@@ -2,14 +2,82 @@
 
 (a) wall-clock per step vs baselines (us_per_call column);
 (b) basis-update frequency sweep (performance degrades only mildly);
-(c) stage-aware vs uniform vs reversed allocation under the same budget."""
+(c) stage-aware vs uniform vs reversed allocation under the same budget;
+(d) SPMD schedule comparison — fill-drain vs 1F1B step time on the real
+    shard_map runtime (subprocess with forced host devices)."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 
 sys.path.insert(0, "src")
 
 from benchmarks.common import tail, train_curve
+
+SPMD_TIMING_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(stages)d"
+import sys
+sys.path.insert(0, "src")
+import json, time
+import jax
+from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec, OptimizerConfig
+from repro.data import batches
+from repro.engine import LoopConfig, SpmdEngine, run_loop
+from repro.launch.mesh import make_mesh_compat
+
+cfg = ModelConfig(num_layers=%(stages)d, d_model=32, d_ff=64, vocab_size=64,
+                  max_seq_len=64,
+                  attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
+                  pattern=(BlockSpec("attn", "dense"),), scan_layers=False)
+K, M, steps = %(stages)d, %(microbatches)d, %(steps)d
+mesh = make_mesh_compat((K, 1), ("stage", "data"))
+rows = []
+for sched in %(schedules)s:
+    ocfg = OptimizerConfig(name="adam", learning_rate=1e-3, total_steps=steps,
+                           schedule="constant")
+    engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=M, mesh=mesh,
+                        schedule=sched)
+    state = engine.init_state(key=jax.random.PRNGKey(0))
+    data = batches(cfg, M * 2, 16, seed=0)
+    state, _ = run_loop(engine, data, LoopConfig(steps=1), state=state)  # compile
+    t0 = time.perf_counter()
+    state, losses = run_loop(engine, data, LoopConfig(steps=steps), state=state,
+                             start_step=1)
+    dt = time.perf_counter() - t0
+    rows.append({"schedule": sched, "us_per_step": 1e6 * dt / (steps - 1),
+                 "final": losses[-1]})
+print(json.dumps(rows))
+"""
+
+
+def spmd_schedule_rows(quick: bool = True, schedules=("fill_drain", "1f1b")):
+    """Time the shard_map runtime under each schedule (fig9d)."""
+    stages, microbatches = (4, 8) if quick else (8, 16)
+    steps = 6 if quick else 20
+    script = SPMD_TIMING_SCRIPT % {
+        "stages": stages, "microbatches": microbatches, "steps": steps,
+        "schedules": repr(tuple(schedules)),
+    }
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"spmd timing subprocess failed: {out.stderr[-2000:]}")
+    rows = []
+    for r in json.loads(out.stdout.strip().splitlines()[-1]):
+        rows.append({
+            "name": f"fig9d/spmd_{r['schedule']}",
+            "us_per_call": r["us_per_step"],
+            "derived": f"K={stages};M={microbatches};final={r['final']:.3f}",
+        })
+    return rows
 
 
 def run(quick: bool = True):
@@ -37,10 +105,21 @@ def run(quick: bool = True):
                  "derived": f"final={tail(sa['losses']):.3f}"})
     rows.append({"name": "fig9c/reversed", "us_per_call": rev["us_per_step"],
                  "derived": f"final={tail(rev['losses']):.3f}"})
+    # (d) SPMD runtime: step-time of fill-drain vs 1F1B on forced host devices
+    rows.extend(spmd_schedule_rows(quick=quick))
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spmd-smoke", action="store_true",
+                    help="only the 1F1B schedule point at tiny shapes (CI)")
+    args = ap.parse_args()
+    if args.spmd_smoke:
+        emit(spmd_schedule_rows(quick=True, schedules=("1f1b",)))
+    else:
+        emit(run())

@@ -3,7 +3,11 @@ Llama-3-8B-shaped matrices (attention 4096x4096, MLP 4096x14336), FP32.
 
 Computed EXACTLY from the optimizer's real state pytrees (not formulas):
 we init the basis-rotation state for one matrix of each shape and count
-state bytes beyond plain Adam's m/v."""
+state bytes beyond plain Adam's m/v.
+
+Also reports the SPMD runtime's per-stage live activation buffers under the
+two tick schedules — fill-drain's O(M) staging vs 1F1B's O(K) stash — at the
+paper's pipeline shape, from the schedules' own memory model."""
 from __future__ import annotations
 
 import sys
@@ -13,7 +17,9 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.configs import get_config
 from repro.core import basis_rotation_adam
+from repro.engine import schedule_activation_bytes
 from repro.optim import constant_schedule
 
 SHAPES = {"attn": (4096, 4096), "mlp": (4096, 14336)}
@@ -32,6 +38,24 @@ def _state_bytes(shape, source, geometry):
     return extra
 
 
+def _schedule_rows(stages: int = 16, microbatches: int = 64,
+                   microbatch_size: int = 8, seq_len: int = 512):
+    """Per-stage activation-buffer bytes for each pipeline schedule at the
+    paper's production pipeline shape (16 stages, 64 microbatches)."""
+    cfg = get_config("paper_95m")
+    rows = []
+    for sched in ("fill_drain", "1f1b"):
+        gb = schedule_activation_bytes(
+            cfg, stages, microbatches, microbatch_size, seq_len, schedule=sched
+        ) / 1e9
+        rows.append({
+            "name": f"tab2/pipe_act_{sched}",
+            "us_per_call": 0.0,
+            "derived": f"K={stages};M={microbatches};per_stage_gb={gb:.3f}",
+        })
+    return rows
+
+
 def run(quick: bool = True):
     rows = []
     for source in ("2nd", "1st"):
@@ -43,6 +67,7 @@ def run(quick: bool = True):
                 "us_per_call": 0.0,
                 "derived": f"attn_gb={attn:.2f};mlp_gb={mlp:.2f}",
             })
+    rows.extend(_schedule_rows())
     return rows
 
 

@@ -19,6 +19,9 @@ def main():
                     help="reduced model (CI-sized), 60 steps")
     ap.add_argument("--backend", default="sim", choices=["sim", "spmd"],
                     help="sim: exact-delay simulation; spmd: shard_map runtime")
+    ap.add_argument("--schedule", default="fill_drain",
+                    choices=["fill_drain", "1f1b"],
+                    help="spmd tick schedule (1f1b: O(stages) activation stash)")
     args = ap.parse_args()
     cmd = [
         sys.executable, "-m", "repro.launch.train",
@@ -32,6 +35,9 @@ def main():
         "--ckpt-dir", "/tmp/repro_ckpt_95m",
         "--out", "experiments/train_95m_async.json",
     ]
+    # always forwarded: an explicit --schedule with the sim backend surfaces
+    # train.py's validation error instead of being silently ignored here
+    cmd.extend(["--schedule", args.schedule])
     if args.quick:
         cmd.append("--smoke")
     print(" ".join(cmd))

@@ -36,11 +36,32 @@ def save_checkpoint(path: str, tree: Any, step: int = 0, meta: Dict | None = Non
     os.makedirs(path, exist_ok=True)
     leaves = jax.tree_util.tree_leaves(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    # Crash-safe save: the arrays go to a step-versioned file (written under a
+    # temp name, then os.replace'd), and the manifest — swapped in LAST —
+    # names that file, so the manifest replace is the single atomic commit
+    # point. A crash anywhere mid-save leaves the old manifest pointing at
+    # the old arrays file, which is only garbage-collected after the new
+    # manifest lands. (Temp name ends in .npz: np.savez appends the
+    # extension to anything else.)
+    arrays_name = f"arrays-{step:08d}.npz"
+    arrays_tmp = os.path.join(path, ".arrays.tmp.npz")
+    manifest_tmp = os.path.join(path, ".manifest.tmp.json")
+    np.savez(arrays_tmp, **arrays)
     manifest = {"spec": _spec(tree), "num_leaves": len(leaves), "step": step,
-                "meta": meta or {}}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+                "arrays_file": arrays_name, "meta": meta or {}}
+    with open(manifest_tmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(arrays_tmp, os.path.join(path, arrays_name))
+    os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
+    for name in os.listdir(path):  # drop superseded array files
+        if name != arrays_name and (
+            name == "arrays.npz"
+            or (name.startswith("arrays-") and name.endswith(".npz"))
+        ):
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:  # pragma: no cover — another writer raced us
+                pass
 
 
 def _rebuild(spec: Any, leaves: list, pos: list) -> Any:
@@ -60,7 +81,8 @@ def _rebuild(spec: Any, leaves: list, pos: list) -> Any:
 def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    # pre-atomic-save checkpoints used a fixed "arrays.npz" name
+    data = np.load(os.path.join(path, manifest.get("arrays_file", "arrays.npz")))
     leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
     tree = _rebuild(manifest["spec"], leaves, [0])
     return tree, manifest["step"], manifest.get("meta", {})

@@ -57,7 +57,13 @@ class SyntheticLM:
         for t in range(seq_len):
             cum = np.cumsum(self._rows(out[:, t]), axis=1)
             u = self.rng.rand(batch, 1)
-            out[:, t + 1] = (u < cum).argmax(axis=1)
+            # clamped searchsorted draw: first index with cum > u. The old
+            # `(u < cum).argmax(axis=1)` returned token 0 whenever float
+            # rounding left u >= cum[-1] (all-False argmax), silently
+            # spiking the head of the distribution; off that edge the two
+            # formulas agree, so fixed-seed streams are unchanged.
+            idx = (cum <= u).sum(axis=1)
+            out[:, t + 1] = np.minimum(idx, self.vocab - 1)
         return out
 
 

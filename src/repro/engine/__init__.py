@@ -2,11 +2,19 @@
 
 `SimEngine` runs the paper's deterministic virtual-stage simulation on one
 device; `SpmdEngine` runs the shard_map pipeline runtime with physical
-staleness. Both sit behind `PipelineEngine` and are driven by
-`engine.loop.run_loop` (see DESIGN.md §2).
+staleness under a pluggable tick schedule (`engine.schedules`: fill-drain or
+1F1B). Both sit behind `PipelineEngine` and are driven by
+`engine.loop.run_loop` (see DESIGN.md §2-3).
 """
 from repro.engine.base import EngineState, PipelineEngine
 from repro.engine.loop import LoopConfig, resume_if_present, run_loop
+from repro.engine.schedules import (
+    SCHEDULES,
+    make_1f1b_grad,
+    make_fill_drain_loss,
+    make_schedule_grad,
+    schedule_activation_bytes,
+)
 from repro.engine.sim import SimEngine
 from repro.engine.spmd import (
     SpmdEngine,
@@ -23,10 +31,15 @@ __all__ = [
     "LoopConfig",
     "resume_if_present",
     "run_loop",
+    "SCHEDULES",
     "SimEngine",
     "SpmdEngine",
+    "make_1f1b_grad",
+    "make_fill_drain_loss",
     "make_pipeline_grad",
     "make_pipeline_loss",
+    "make_schedule_grad",
+    "schedule_activation_bytes",
     "spmd_delay_specs",
     "stack_stage_params",
     "unstack_stage_params",

@@ -34,15 +34,50 @@ class LoopConfig:
 
 
 def resume_if_present(
-    engine: PipelineEngine, state: EngineState, ckpt_dir: Optional[str]
+    engine: PipelineEngine,
+    state: EngineState,
+    ckpt_dir: Optional[str],
+    data_iter: Optional[Iterator[Dict]] = None,
 ) -> Tuple[EngineState, int]:
-    """Replace `state` with the latest checkpoint under `ckpt_dir`, if any."""
+    """Replace `state` with the latest checkpoint under `ckpt_dir`, if any.
+
+    Pass the run's `data_iter` to fast-forward it past the `start_step`
+    batches the interrupted run already consumed — without this a resumed
+    run replays batches 0..start_step and diverges from the uninterrupted
+    fixed-seed curve it is supposed to continue.
+    """
     if not ckpt_dir or not os.path.exists(os.path.join(ckpt_dir, "manifest.json")):
         return state, 0
     from repro.checkpoint import load_checkpoint
 
     tree, step, _ = load_checkpoint(ckpt_dir)
+    if data_iter is not None:
+        for _ in range(step):
+            next(data_iter)
     return engine.load_state(tree), step
+
+
+def _read_metrics_prefix(cfg: LoopConfig, start_step: int) -> Tuple[List[float], int]:
+    """Losses for absolute steps [prev_start, start_step) from an existing
+    metrics file, so a resumed run keeps the full absolute-step series.
+
+    Returns (prefix, prefix_start); falls back to an empty prefix anchored at
+    `start_step` when there is no usable file (then `steps_done` still counts
+    absolute steps but the series only covers the post-resume segment).
+    """
+    if not (cfg.out_path and start_step and os.path.exists(cfg.out_path)):
+        return [], start_step
+    try:
+        with open(cfg.out_path) as f:
+            prev = json.load(f)
+        prev_losses = list(prev.get("losses", []))
+        prev_start = int(prev.get("start_step", 0))
+    except (ValueError, OSError, TypeError):
+        return [], start_step
+    need = start_step - prev_start
+    if need < 0 or len(prev_losses) < need:
+        return [], start_step  # gap: the old file doesn't reach start_step
+    return prev_losses[:need], prev_start
 
 
 def _write_metrics(
@@ -50,8 +85,8 @@ def _write_metrics(
 ) -> None:
     os.makedirs(os.path.dirname(cfg.out_path) or ".", exist_ok=True)
     with open(cfg.out_path, "w") as f:  # incremental: survives interruption
-        # losses[i] is the loss at absolute step start_step + i (a resumed run
-        # only holds post-resume entries)
+        # losses[i] is the loss at absolute step start_step + i; on resume the
+        # caller merges the pre-resume series so this covers the whole run
         json.dump({**cfg.out_meta, "steps_done": steps_done,
                    "start_step": start_step, "losses": losses}, f)
 
@@ -69,6 +104,7 @@ def run_loop(
 
     if state is None:
         state = engine.init_state(key=key)
+    prefix, prefix_start = _read_metrics_prefix(cfg, start_step)
     losses: List[float] = []
     t0 = time.time()
     for t in range(start_step, cfg.steps):
@@ -79,12 +115,16 @@ def run_loop(
             extra = f"  ce {float(metrics['ce']):.4f}" if "ce" in metrics else ""
             print(f"step {t:5d}  loss {losses[-1]:.4f}{extra}"
                   f"  ({time.time() - t0:.1f}s)")
-        if cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0:
+        wrote_ckpt = cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0
+        if wrote_ckpt:
             save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=t + 1)
-        if cfg.out_path and (t + 1) % max(cfg.log_every, 1) == 0:
-            _write_metrics(cfg, losses, t + 1, start_step)
+        # metrics are flushed at every checkpoint too, so the metrics file
+        # never lags a checkpoint a later resume will restart from (a lagging
+        # file would forfeit its pre-resume series at merge time)
+        if cfg.out_path and (wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0):
+            _write_metrics(cfg, prefix + losses, t + 1, prefix_start)
     if cfg.ckpt_dir:
         save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=cfg.steps)
     if cfg.out_path:
-        _write_metrics(cfg, losses, cfg.steps, start_step)
+        _write_metrics(cfg, prefix + losses, cfg.steps, prefix_start)
     return state, losses

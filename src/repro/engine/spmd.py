@@ -1,12 +1,12 @@
 """Distributed pipeline backend: `shard_map` over a `stage` mesh axis.
 
 TPU adaptation of PipeDream (DESIGN.md §3): activations move between
-neighbouring stages with `jax.lax.ppermute` inside one jitted program; the
-backward pipeline is generated by autodiff through the ppermute schedule (the
-reverse permutation is exactly the backward activation-grad flow). The
-fill-drain tick schedule is a `jax.lax.scan` over M + K - 1 ticks, so the
-traced program is O(1) in both microbatches and stages — the jaxpr for M=64
-is the same size as for M=4.
+neighbouring stages with `jax.lax.ppermute` inside one jitted program. The
+tick schedules live in `repro.engine.schedules` behind one interface —
+``fill_drain`` (forward scan + autodiff backward, O(M) activation buffer) and
+``1f1b`` (interleaved explicit forward/backward ticks, O(K) activation
+stash). Both scan the tick body, so the traced program is O(1) in both
+microbatches and stages — the jaxpr for M=64 is the same size as for M=4.
 
 Staleness (the async part) is applied by composing the resulting gradient
 with the per-stage delay FIFO (`repro.pipeline.delay.stage_delayed_optimizer`)
@@ -31,14 +31,11 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core.layout import path_str
 from repro.engine.base import EngineState, PipelineEngine
-from repro.models.layers import apply_norm
-from repro.models.model import _embed, _logits, cast_params, cross_entropy
-from repro.models.transformer import block_train
+from repro.engine.schedules import make_fill_drain_loss, make_schedule_grad
 
 # shared params living on the FIRST stage (delay tau = K-1); everything else
 # shared (final norm, LM head) lives on the last stage (tau = 0)
@@ -86,102 +83,26 @@ def make_pipeline_loss(
     stage_axis: str = "stage",
     data_axis: str = "data",
 ):
-    """Returns loss_fn(stage_params, shared_params, batch) -> scalar.
+    """Fill-drain loss_fn(stage_params, shared, batch) -> scalar.
 
-    batch: tokens/labels of shape (M, mb, S) sharded over data on dim 1.
+    Only the fill-drain schedule has a standalone differentiable loss; the
+    1F1B schedule builds its gradient explicitly — use ``make_pipeline_grad``
+    with ``schedule="1f1b"`` for it.
     """
-    M = num_microbatches
-    spec = cfg.pattern[0]
-
-    def stage_apply(wk, x):
-        # wk leaves: (per_stage_layers, ...); scan over the stage's layers
-        def body(h, w):
-            h, _ = block_train(w, h, cfg, spec)
-            return h, None
-
-        x, _ = jax.lax.scan(body, x, wk)
-        return x
-
-    def per_device(stage_params, shared, tokens, labels):
-        # stage_params leaves arrive as (1, per, ...) local slices
-        wk = cast_params(jax.tree.map(lambda x: x[0], stage_params), cfg.compute_dtype)
-        shared = cast_params(shared, cfg.compute_dtype)
-        k = jax.lax.axis_index(stage_axis)
-        K = num_stages
-        mb, S = tokens.shape[1], tokens.shape[2]
-
-        emb = _embed(shared, cfg, tokens)  # (M, mb, S, d)
-        if cfg.learnable_pos_emb:
-            emb = emb + shared["pos_emb"][:S].astype(emb.dtype)
-
-        d = emb.shape[-1]
-        zeros = jnp.zeros((mb, S, d), emb.dtype)
-        out_buf = jnp.zeros((M, mb, S, d), emb.dtype)
-        fwd_perm = [(i, i + 1) for i in range(K - 1)]
-
-        # Fill-drain schedule as a scan over ticks: stage 0 injects microbatch
-        # t while t < M, the last stage collects microbatch t - (K-1) once it
-        # exists. The tick body is traced ONCE — trace/jaxpr size is constant
-        # in M and K (the Python-unrolled predecessor was O(M + K)).
-        def tick(carry, t):
-            recv, out = carry
-            inject = jax.lax.dynamic_index_in_dim(
-                emb, jnp.minimum(t, M - 1), axis=0, keepdims=False
-            )
-            inject = jnp.where(t < M, inject, zeros)
-            inp = jnp.where(k == 0, inject, recv)
-            h = stage_apply(wk, inp)
-            mb_idx = t - (K - 1)
-            collect = (mb_idx >= 0) & (k == K - 1)
-            idx = jnp.clip(mb_idx, 0, M - 1)
-            cur = jax.lax.dynamic_index_in_dim(out, idx, axis=0, keepdims=False)
-            out = jax.lax.dynamic_update_index_in_dim(
-                out, jnp.where(collect, h, cur), idx, axis=0
-            )
-            recv = jax.lax.ppermute(h, stage_axis, fwd_perm)
-            return (recv, out), None
-
-        ticks = jnp.arange(M + K - 1)
-        (_, out_buf), _ = jax.lax.scan(tick, (zeros, out_buf), ticks)
-
-        x = apply_norm(shared["final_norm"], out_buf)
-        logits = _logits(shared, cfg, x)  # (M, mb, S, V)
-        ce = cross_entropy(logits, labels)
-        is_last = (k == K - 1).astype(jnp.float32)
-        # only the last stage's loss is real; psum over stages, mean over the
-        # data axes (a tuple covers the multi-pod (pod, data) case)
-        loss = jax.lax.psum(ce * is_last, stage_axis)
-        loss = jax.lax.pmean(loss, data_axis)
-        return loss
-
-    from jax.experimental.shard_map import shard_map
-
-    ln = shard_map(
-        per_device,
-        mesh=mesh,
-        in_specs=(
-            P(stage_axis),  # stage params stacked on stage axis
-            P(),  # shared params replicated
-            P(None, data_axis, None),  # tokens (M, mb, S)
-            P(None, data_axis, None),
-        ),  # data_axis may be a tuple of mesh axes (multi-pod)
-        out_specs=P(),
-        check_rep=False,
+    return make_fill_drain_loss(
+        cfg, mesh, num_stages, num_microbatches,
+        stage_axis=stage_axis, data_axis=data_axis,
     )
 
-    def loss_fn(stage_params, shared, batch):
-        return ln(stage_params, shared, batch["tokens"], batch["labels"])
 
-    return loss_fn
-
-
-def make_pipeline_grad(cfg, mesh, num_stages, num_microbatches, **kw):
-    loss_fn = make_pipeline_loss(cfg, mesh, num_stages, num_microbatches, **kw)
-
-    def grad_fn(stage_params, shared, batch):
-        return jax.value_and_grad(loss_fn, argnums=(0, 1))(stage_params, shared, batch)
-
-    return grad_fn
+def make_pipeline_grad(
+    cfg, mesh, num_stages, num_microbatches, schedule: str = "fill_drain", **kw
+):
+    """grad_fn(stage_params, shared, batch) -> (loss, (g_stacked, g_shared))
+    under the chosen tick schedule (``"fill_drain"`` or ``"1f1b"``)."""
+    return make_schedule_grad(
+        cfg, mesh, num_stages, num_microbatches, schedule=schedule, **kw
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -216,8 +137,12 @@ class SpmdEngine(PipelineEngine):
     """Complete async SPMD train step: pipeline grads composed with the
     per-stage delay FIFO around any `build_optimizer` base.
 
-    ``async_grads=False`` drops the delay wrapper — the synchronous-gradient
-    reference used to cross-check the two backends against each other.
+    ``schedule`` picks the tick schedule: ``"fill_drain"`` (O(M) activation
+    buffer per stage) or ``"1f1b"`` (O(K) stash). Both produce the same
+    synchronous gradient to fp32 tolerance, so either composes unchanged with
+    the delay FIFO. ``async_grads=False`` drops the delay wrapper — the
+    synchronous-gradient reference used to cross-check the two backends
+    against each other.
     """
 
     name = "spmd"
@@ -231,6 +156,7 @@ class SpmdEngine(PipelineEngine):
         mesh: Optional[Mesh] = None,
         grad_clip: float = 1.0,
         async_grads: bool = True,
+        schedule: str = "fill_drain",
     ):
         from repro.launch.mesh import make_pipeline_mesh
         from repro.models.model import init_model
@@ -252,10 +178,11 @@ class SpmdEngine(PipelineEngine):
                 "the SPMD stacked layout does not expose; use --backend sim"
             )
         self.cfg = cfg
+        self.schedule = schedule
         self.num_stages = K = num_stages
         self.num_microbatches = M = num_microbatches or num_stages
         self.mesh = mesh if mesh is not None else make_pipeline_mesh(K)
-        self.grad_fn = make_pipeline_grad(cfg, self.mesh, K, M)
+        self.grad_fn = make_pipeline_grad(cfg, self.mesh, K, M, schedule=schedule)
 
         # delay specs from parameter SHAPES only — no device arrays yet
         shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))

@@ -13,6 +13,7 @@ the production meshes:
     multi-pod  : (pod=2, stage=16, data=16)   = 512 chips
 
 Usage: python -m repro.launch.dryrun_pipeline [--multi-pod] [--stages 16]
+                                              [--schedule fill_drain|1f1b]
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -29,7 +30,11 @@ from repro.launch.roofline import roofline_from_compiled  # noqa: E402
 from repro.models.model import init_model  # noqa: E402
 from repro.optim.base import apply_updates  # noqa: E402
 from repro.optim.factory import build_optimizer  # noqa: E402
-from repro.pipeline.spmd import make_pipeline_grad, stack_stage_params  # noqa: E402
+from repro.pipeline.spmd import (  # noqa: E402
+    SCHEDULES,
+    make_pipeline_grad,
+    stack_stage_params,
+)
 
 
 def main():
@@ -37,6 +42,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--stages", type=int, default=16)
     ap.add_argument("--microbatches", type=int, default=32)
+    ap.add_argument("--schedule", default="fill_drain", choices=SCHEDULES)
     ap.add_argument("--arch", default="paper_95m")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -83,7 +89,10 @@ def main():
         "labels": jax.ShapeDtypeStruct((M, mb, S), jnp.int32, sharding=tok_sharding),
     }
 
-    grad_fn = make_pipeline_grad(cfg, mesh, K, M, data_axis=data_axes if args.multi_pod else "data")
+    grad_fn = make_pipeline_grad(
+        cfg, mesh, K, M, schedule=args.schedule,
+        data_axis=data_axes if args.multi_pod else "data",
+    )
 
     # async step: pipeline grads + per-stage delayed basis-rotation update
     # (same composition as SpmdEngine: exact per-stage tau via the diagonal
@@ -128,6 +137,7 @@ def main():
         "mesh": "2x16x16" if args.multi_pod else "16x16",
         "stages": K,
         "microbatches": M,
+        "schedule": args.schedule,
         "status": "ok",
         "compile_s": round(time.time() - t0, 1),
         "collectives": rf.collectives,

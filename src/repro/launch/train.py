@@ -6,9 +6,11 @@ Two backends behind the same loop (`repro.engine`):
     pipeline parallelism — the paper's experimental setup. Staleness is
     imposed exactly by the per-leaf gradient FIFO.
   * ``--backend spmd``: the shard_map pipeline runtime — layers sharded over
-    a `stage` mesh axis, ppermute moving activations in a scanned fill-drain
-    schedule, and the per-stage delay FIFO applying PipeDream weight-stashing
-    staleness to the stage-stacked parameters. On a CPU-only host the driver
+    a `stage` mesh axis, ppermute moving activations under a scanned tick
+    schedule (``--schedule fill_drain`` or ``1f1b``; 1F1B bounds the live
+    activation stash at O(stages) instead of O(microbatches)), and the
+    per-stage delay FIFO applying PipeDream weight-stashing staleness to the
+    stage-stacked parameters. On a CPU-only host the driver
     forces `--stages` host devices automatically; on accelerator machines
     whose device count doesn't divide `--stages`, re-run with
     ``JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=K``.
@@ -35,6 +37,12 @@ def parse_args(argv=None):
     ap.add_argument("--stages", type=int, default=8)
     ap.add_argument("--microbatches", type=int, default=0,
                     help="spmd backend: pipeline microbatches (default: stages)")
+    # literal list (not engine.schedules.SCHEDULES): importing repro.engine
+    # pulls in jax, which must not happen before main() sets XLA_FLAGS
+    ap.add_argument("--schedule", default="fill_drain",
+                    choices=["fill_drain", "1f1b"],
+                    help="spmd backend: tick schedule (1f1b bounds the "
+                         "activation stash at O(stages) instead of O(M))")
     ap.add_argument("--optimizer", default="basis_rotation")
     ap.add_argument("--rotation-source", default="2nd", choices=["1st", "2nd"])
     ap.add_argument("--rotation-geometry", default="bilateral",
@@ -59,6 +67,11 @@ def parse_args(argv=None):
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.backend == "sim" and args.schedule != "fill_drain":
+        raise SystemExit(
+            "--schedule picks the SPMD tick schedule; the sim backend imposes "
+            "delays directly and has no schedule (use --backend spmd)"
+        )
     if args.backend == "spmd":
         if args.weight_prediction or args.no_stash:
             raise SystemExit(
@@ -137,6 +150,7 @@ def main(argv=None):
         engine = SpmdEngine(
             cfg, ocfg, num_stages=args.stages,
             num_microbatches=args.microbatches, async_grads=not args.sync,
+            schedule=args.schedule,
         )
     else:
         opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages)
@@ -150,7 +164,10 @@ def main(argv=None):
         )
 
     state = engine.init_state(params=params)
-    state, start_step = resume_if_present(engine, state, args.ckpt_dir)
+    data = batches(cfg, args.batch, args.seq, seed=args.seed)
+    # resume_if_present fast-forwards `data` past the consumed batches, so a
+    # resumed run continues the exact uninterrupted stream
+    state, start_step = resume_if_present(engine, state, args.ckpt_dir, data)
     if start_step:
         print(f"resumed from {args.ckpt_dir} at step {start_step}")
 
@@ -159,11 +176,9 @@ def main(argv=None):
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         out_path=args.out,
         out_meta={"arch": cfg.name, "optimizer": args.optimizer,
-                  "stages": args.stages, "backend": args.backend},
+                  "stages": args.stages, "backend": args.backend,
+                  "schedule": args.schedule if args.backend == "spmd" else None},
     )
-    data = batches(cfg, args.batch, args.seq, seed=args.seed)
-    for _ in range(start_step):  # resume: fast-forward past consumed batches
-        next(data)
     _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
     if losses:
         print(f"final loss {losses[-1]:.4f}")

@@ -1,6 +1,13 @@
 """Compatibility shim: the shard_map pipeline runtime moved under the engine
-subsystem (`repro.engine.spmd`, DESIGN.md §3) when the train loop was unified
-behind `PipelineEngine`. Import sites keep working through this module."""
+subsystem (`repro.engine.spmd` + `repro.engine.schedules`, DESIGN.md §3) when
+the train loop was unified behind `PipelineEngine`. Import sites keep working
+through this module."""
+from repro.engine.schedules import (  # noqa: F401
+    SCHEDULES,
+    make_1f1b_grad,
+    make_schedule_grad,
+    schedule_activation_bytes,
+)
 from repro.engine.spmd import (  # noqa: F401
     SpmdEngine,
     make_pipeline_grad,
@@ -11,9 +18,13 @@ from repro.engine.spmd import (  # noqa: F401
 )
 
 __all__ = [
+    "SCHEDULES",
     "SpmdEngine",
+    "make_1f1b_grad",
     "make_pipeline_grad",
     "make_pipeline_loss",
+    "make_schedule_grad",
+    "schedule_activation_bytes",
     "spmd_delay_specs",
     "stack_stage_params",
     "unstack_stage_params",

@@ -4,6 +4,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
@@ -46,6 +47,53 @@ def test_data_deterministic_and_learnable():
     assert h_cond < h_uni - 0.1  # there is something to learn
 
 
+def test_sampler_rounding_edge_clamps_to_last_token():
+    """Regression: when float rounding leaves u >= cum[-1], the old
+    `(u < cum).argmax` draw returned token 0 (argmax of all-False); the
+    clamped searchsorted draw must land at the tail of the distribution."""
+    stream = SyntheticLM(32, seed=0)
+
+    class EdgeRng:
+        """rand() returns 1.0 — beyond every row's cumsum — to force the edge."""
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def rand(self, *shape):
+            return np.ones(shape)
+
+        def randint(self, *a, **k):
+            return self.inner.randint(*a, **k)
+
+    stream.rng = EdgeRng(stream.rng)
+    toks = stream.sample(4, 8)
+    assert (toks >= 0).all() and (toks < 32).all()
+    # every draw hit the u >= cum[-1] edge: must clamp to the tail, never
+    # fall back to token 0 (the most-probable Zipf head — a silent bias)
+    assert (toks[:, 1:] != 0).all()
+    assert (toks[:, 1:] >= 30).all()
+
+
+def test_sampler_off_edge_draw_unchanged():
+    """The searchsorted draw is the first index with cum > u — identical to
+    the previous strict-inequality argmax away from the rounding edge, so
+    fixed-seed token streams are preserved."""
+    stream = SyntheticLM(64, seed=5)
+    toks = stream.sample(8, 32)
+    ref = SyntheticLM(64, seed=5)
+    out = np.empty_like(toks)
+    out[:, 0] = ref.rng.randint(0, 64, size=8)
+    for t in range(32):
+        cum = np.cumsum(ref._rows(out[:, t]), axis=1)
+        u = ref.rng.rand(8, 1)
+        old = (u < cum).argmax(axis=1)  # the pre-fix formula
+        valid = (u < cum[:, -1:]).ravel()  # rows where it was well-defined
+        new_draw = np.minimum((cum <= u).sum(axis=1), 63)
+        np.testing.assert_array_equal(new_draw[valid], old[valid])
+        out[:, t + 1] = new_draw
+    np.testing.assert_array_equal(toks, out)
+
+
 def test_data_modalities():
     audio = ModelConfig(vocab_size=32, num_codebooks=4)
     b = next(batches(audio, 2, 8))
@@ -76,6 +124,68 @@ def test_checkpoint_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves((params, state)), jax.tree.leaves((p2, s2))):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert a.dtype == b.dtype
+
+
+def test_checkpoint_interrupted_save_keeps_previous(tmp_path, monkeypatch):
+    """A crash mid-save must not corrupt the only checkpoint: files are
+    written to temp names and atomically swapped in (arrays first, manifest
+    last), so the pre-crash checkpoint stays loadable."""
+    path = str(tmp_path / "ckpt")
+    tree1 = {"w": jnp.arange(4.0), "b": jnp.ones((2, 2))}
+    save_checkpoint(path, tree1, step=1, meta={"note": "good"})
+
+    # crash while writing the arrays file (partial bytes on disk, then die)
+    def savez_boom(file, **kw):
+        with open(file, "wb") as f:
+            f.write(b"\x00partial-garbage")
+        raise RuntimeError("simulated crash during array write")
+
+    monkeypatch.setattr(np, "savez", savez_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, {"w": jnp.arange(4.0) + 9, "b": jnp.zeros((2, 2))},
+                        step=2)
+    monkeypatch.undo()
+
+    tree, step, meta = load_checkpoint(path)
+    assert step == 1 and meta["note"] == "good"
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.arange(4.0))
+
+    # crash while serialising the manifest: same guarantee
+    import json as _json
+
+    real_dump = _json.dump
+
+    def dump_boom(obj, f, **kw):
+        f.write('{"spec": "trunc')
+        raise RuntimeError("simulated crash during manifest write")
+
+    monkeypatch.setattr(_json, "dump", dump_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, tree1, step=3)
+    monkeypatch.setattr(_json, "dump", real_dump)
+
+    tree, step, _ = load_checkpoint(path)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["b"]), np.ones((2, 2)))
+
+    # crash after the arrays file commits but before the manifest swap: the
+    # old manifest still names the old arrays file — never a mixed state
+    real_replace = os.replace
+
+    def replace_boom(src, dst):
+        if dst.endswith("manifest.json"):
+            raise RuntimeError("simulated crash before manifest commit")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", replace_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, {"w": jnp.arange(4.0) + 9, "b": jnp.zeros((2, 2))},
+                        step=4)
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    tree, step, _ = load_checkpoint(path)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.arange(4.0))
 
 
 def test_param_pspec_rules():
