@@ -1,0 +1,120 @@
+"""Fig. 17 (Appendix I): stage-aware basis-refresh allocation vs uniform vs
+the reversed ablation, at the same total refresh budget — runnable on either
+backend.
+
+``--backend sim`` (default) runs the virtual-stage simulation; ``--backend
+spmd`` runs the same three allocations on the shard_map pipeline runtime
+(subprocess with forced host devices), where the per-stage periods live
+inside one stacked ``(K, per, m, n)`` leaf via the vectorized refresh mask.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import tail, train_curve
+
+ALLOCATIONS = (
+    ("uniform", {}),
+    ("stage_aware", {"stage_aware": True}),
+    ("reversed", {"stage_aware": True, "stage_aware_reversed": True}),
+)
+
+SPMD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(stages)d"
+import sys
+sys.path.insert(0, "src")
+import json, time
+import jax
+from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec, OptimizerConfig
+from repro.data import batches
+from repro.engine import LoopConfig, SpmdEngine, run_loop
+from repro.launch.mesh import make_mesh_compat
+
+cfg = ModelConfig(num_layers=%(stages)d, d_model=32, d_ff=64, vocab_size=64,
+                  max_seq_len=64,
+                  attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
+                  pattern=(BlockSpec("attn", "dense"),), scan_layers=False)
+K, M, steps = %(stages)d, %(stages)d, %(steps)d
+mesh = make_mesh_compat((K, 1), ("stage", "data"))
+rows = []
+for label, kw in %(allocs)s:
+    ocfg = OptimizerConfig(name="basis_rotation", learning_rate=3e-3,
+                           total_steps=steps, rotation_freq=5,
+                           schedule="constant", **kw)
+    engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=M, mesh=mesh)
+    state = engine.init_state(key=jax.random.PRNGKey(0))
+    data = batches(cfg, M * 2, 16, seed=0)
+    state, first = run_loop(engine, data, LoopConfig(steps=1), state=state)  # compile
+    t0 = time.perf_counter()
+    state, losses = run_loop(engine, data, LoopConfig(steps=steps), state=state,
+                             start_step=1)
+    dt = time.perf_counter() - t0
+    losses = first + losses
+    rows.append({"label": label, "us_per_step": 1e6 * dt / (steps - 1),
+                 "final": sum(losses[-5:]) / 5})
+print(json.dumps(rows))
+"""
+
+
+def spmd_rows(quick: bool = True):
+    stages = 4 if quick else 8
+    steps = 10 if quick else 120
+    script = SPMD_SCRIPT % {
+        "stages": stages, "steps": steps, "allocs": repr(ALLOCATIONS),
+    }
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"fig17 spmd subprocess failed: {out.stderr[-2000:]}")
+    rows = []
+    for r in json.loads(out.stdout.strip().splitlines()[-1]):
+        rows.append({
+            "name": f"fig17/spmd_{r['label']}",
+            "us_per_call": r["us_per_step"],
+            "derived": f"K={stages};final={r['final']:.3f}",
+        })
+    return rows
+
+
+def sim_rows(quick: bool = True, smoke: bool = False):
+    stages, steps = (4, 20) if smoke else (8, 120 if quick else 400)
+    rows = []
+    for label, kw in ALLOCATIONS:
+        out = train_curve("basis_rotation", stages=stages, steps=steps,
+                          rotation_freq=10, **kw)
+        rows.append({"name": f"fig17/sim_{label}",
+                     "us_per_call": out["us_per_step"],
+                     "derived": f"final={tail(out['losses']):.3f}"})
+    return rows
+
+
+def run(quick: bool = True):
+    return sim_rows(quick=quick)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "spmd"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few steps (CI)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.backend == "spmd":
+        emit(spmd_rows(quick=args.smoke or not args.full))
+    else:
+        emit(sim_rows(quick=not args.full, smoke=args.smoke))

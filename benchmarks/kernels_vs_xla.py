@@ -1,0 +1,97 @@
+"""Pallas kernel path vs XLA baseline for the basis-rotation update.
+
+Times one full `basis_rotation_adam` update on a stage-stacked
+``(K, per, m, n)`` leaf with ``use_kernels`` on/off, plus the fused
+Adam-scale kernel against its pure-jnp reference in isolation. Off-TPU the
+kernels run in interpret mode — the comparison there validates wiring and
+correctness, not speed (Mosaic compilation only exists on TPU); on a TPU
+host the same rows measure the real kernel path.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def optimizer_rows(K: int, per: int, dim: int):
+    from repro.core.basis_rotation import basis_rotation_adam
+    from repro.optim.base import constant_schedule
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (K, per, dim, dim))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (K, per, dim, dim))}
+    rows = []
+    for use_kernels in (False, True):
+        opt = basis_rotation_adam(
+            constant_schedule(1e-3), freq=1, use_kernels=use_kernels
+        )
+        s = opt.init(params)
+
+        @jax.jit
+        def step(g, s):
+            return opt.update(g, s, params, jnp.int32(1))
+
+        us = _time(step, g, s)
+        label = "kernels" if use_kernels else "xla"
+        rows.append({
+            "name": f"kernels_vs_xla/rotation_update_{label}",
+            "us_per_call": us,
+            "derived": f"K={K};per={per};dim={dim}",
+        })
+    return rows
+
+
+def adam_scale_rows(shape):
+    from repro.kernels import ops, ref
+
+    g = jax.random.normal(jax.random.PRNGKey(0), shape)
+    m = jax.random.normal(jax.random.PRNGKey(1), shape)
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), shape)) + 0.1
+
+    kfn = jax.jit(lambda g, m, v: ops.adam_scale(g, m, v, 0.999, 1e-8, 0.9, 0.1))
+    rfn = jax.jit(lambda g, m, v: ref.fused_adam_scale_ref(g, m, v, 0.999, 1e-8, 0.9, 0.1))
+    us_k = _time(kfn, g, m, v)
+    us_r = _time(rfn, g, m, v)
+    sk, vk = kfn(g, m, v)
+    sr, vr = rfn(g, m, v)
+    err = max(float(jnp.max(jnp.abs(sk - sr))), float(jnp.max(jnp.abs(vk - vr))))
+    return [
+        {"name": "kernels_vs_xla/fused_adam_kernel", "us_per_call": us_k,
+         "derived": f"shape={'x'.join(map(str, shape))};maxerr={err:.1e}"},
+        {"name": "kernels_vs_xla/fused_adam_xla", "us_per_call": us_r,
+         "derived": f"shape={'x'.join(map(str, shape))}"},
+    ]
+
+
+def run(quick: bool = True):
+    if quick:
+        return optimizer_rows(2, 1, 32) + adam_scale_rows((64, 64))
+    return optimizer_rows(4, 2, 256) + adam_scale_rows((1024, 1024))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI: interpret mode on CPU)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    emit(run(quick=args.smoke or not args.full))

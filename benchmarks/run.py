@@ -20,11 +20,13 @@ MODULES = [
     "fig9_efficiency",
     "fig10_stashing",
     "fig11_alignment",
+    "fig17_stage_aware",
     "fig19_dc",
     "fig21_moe",
     "tab2_memory",
     "tab3_preconditioned",
     "roofline_table",
+    "kernels_vs_xla",
 ]
 
 

@@ -3,6 +3,13 @@ basis-refresh budget proportionally to per-stage delay and compare uniform /
 stage-aware / reversed allocations at the same total budget.
 
     PYTHONPATH=src python examples/stage_aware_rotation.py
+
+The same allocations run on the real SPMD runtime (per-stage periods
+vectorized inside the stacked leaves, DESIGN.md §5a):
+
+    PYTHONPATH=src python -m repro.launch.train --smoke --backend spmd \
+        --optimizer basis_rotation --stage-aware [--use-kernels]
+    python -m benchmarks.fig17_stage_aware --backend spmd
 """
 import sys
 

@@ -3,7 +3,12 @@
 from repro.core.basis_rotation import basis_rotation_adam
 from repro.core.layout import LeafPlan, build_layout, rotated_fraction
 from repro.core.rotation import power_qr, refresh_basis, rotate, unrotate
-from repro.core.stage_aware import freqs_for_delays, stage_aware_freq
+from repro.core.stage_aware import (
+    NEVER,
+    StageContext,
+    freqs_for_delays,
+    stage_aware_freq,
+)
 from repro.core.theory import effective_delay, norm_11, rotated_hessian
 
 __all__ = [
@@ -17,6 +22,8 @@ __all__ = [
     "unrotate",
     "freqs_for_delays",
     "stage_aware_freq",
+    "NEVER",
+    "StageContext",
     "effective_delay",
     "norm_11",
     "rotated_hessian",

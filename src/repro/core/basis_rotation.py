@@ -16,13 +16,24 @@ State is a flat list of per-leaf dicts (ordered like
 pytree: shardable under pjit, delayable under the FIFO wrapper, and
 checkpointable with no special cases.
 
-``freqs``: either a scalar int (uniform refresh period) or a list of ints per
-leaf (stage-aware allocation, `repro.core.stage_aware`). A freq <= 0 means
-"never refresh" (the basis stays at identity unless warm-started).
+``freq``: the refresh-period spec. A scalar int applies one period to every
+leaf; a per-leaf sequence (stage-aware allocation, `repro.core.stage_aware`)
+gives each leaf its own entry, where an entry is either
+
+  * an int — uniform period for the whole leaf (the sim layout's per-layer
+    leaves), refreshed via a single ``lax.cond``; or
+  * a tuple of K ints — per-stage periods over the leaf's LEADING stage axis
+    (the SPMD stage-stacked ``(K, per, m, n)`` layout), refreshed through a
+    vectorized per-stage mask: ``refresh_basis`` runs batched over the stage
+    axis and ``jnp.where`` keeps stage k's old basis unless
+    ``step % freq[k] == 0``.
+
+A period <= 0 or >= ``stage_aware.NEVER`` means "never refresh" (the basis
+stays at identity unless warm-started).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Union
+from typing import List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +45,10 @@ from repro.core.rotation import (
     rotate,
     unrotate,
 )
+from repro.core.stage_aware import NEVER
 from repro.optim.base import Optimizer, Schedule, bias_correction
+
+FreqSpec = Union[int, Tuple[int, ...]]
 
 
 def _init_leaf(p: jnp.ndarray, plan: LeafPlan, source: str) -> dict:
@@ -57,6 +71,49 @@ def _init_leaf(p: jnp.ndarray, plan: LeafPlan, source: str) -> dict:
     return st
 
 
+def _refresh_ops(g, m, ops, freq: FreqSpec, step, source: str, beta2: float):
+    """Apply the (possibly per-stage) refresh schedule to (U, V, L, R).
+
+    Scalar periods keep the single ``lax.cond`` on ``step % f == 0`` — the
+    sim backend's bit-for-bit path. Tuple periods vectorize: the refresh runs
+    batched over the leaf's leading stage axis and a per-stage mask selects,
+    per stage, the refreshed or the previous basis (and Fisher EMA — a
+    non-refreshing stage must not advance L/R either, matching the cond).
+    """
+
+    def do_refresh(o):
+        Uo, Vo, Lo, Ro = o
+        return refresh_basis(g, m, Uo, Vo, Lo, Ro, source, beta2)
+
+    if isinstance(freq, tuple):
+        K = len(freq)
+        assert g.shape[0] == K, (
+            f"per-stage freqs {freq} need a leading stage axis of {K}, "
+            f"got leaf shape {g.shape}"
+        )
+        if not any(0 < f < NEVER for f in freq):
+            return ops
+        farr = jnp.asarray(freq, jnp.int32)
+        live = jnp.asarray([0 < f < NEVER for f in freq])
+        mask = live & (step % jnp.maximum(farr, 1) == 0)  # (K,)
+
+        def masked_refresh(o):
+            new = do_refresh(o)
+
+            def sel(n, old):
+                if old is None:
+                    return None
+                return jnp.where(mask.reshape((K,) + (1,) * (old.ndim - 1)), n, old)
+
+            return tuple(sel(n, old) for n, old in zip(new, o))
+
+        return jax.lax.cond(jnp.any(mask), masked_refresh, lambda o: o, ops)
+
+    if 0 < freq < NEVER:
+        return jax.lax.cond(step % freq == 0, do_refresh, lambda o: o, ops)
+    return ops
+
+
 def basis_rotation_adam(
     schedule: Schedule,
     beta1: float = 0.9,
@@ -64,7 +121,7 @@ def basis_rotation_adam(
     eps: float = 1e-8,
     source: str = "2nd",
     geometry: str = "bilateral",
-    freq: Union[int, Sequence[int]] = 10,
+    freq: Union[int, Sequence[FreqSpec]] = 10,
     weight_decay: float = 0.0,
     min_dim: int = 8,
     use_kernels: bool = False,
@@ -84,9 +141,10 @@ def basis_rotation_adam(
     def update(grads, state, params, step, aux=None):
         layout = build_layout(params, geometry, min_dim)
         if isinstance(freq, int):
-            freqs: List[int] = [freq] * len(layout)
+            freqs: List[FreqSpec] = [freq] * len(layout)
         else:
-            freqs = list(freq)
+            freqs = [tuple(f) if isinstance(f, (tuple, list)) else int(f)
+                     for f in freq]
             assert len(freqs) == len(layout), "freq list must match leaf count"
         lr = schedule(step)
         bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
@@ -101,31 +159,23 @@ def basis_rotation_adam(
             nst["m"] = m
 
             if plan.rotate:
-                U, V = st.get("U"), st.get("V")
-                L, R = st.get("L"), st.get("R")
-                if f > 0:
-
-                    def do_refresh(ops):
-                        Uo, Vo, Lo, Ro = ops
-                        return refresh_basis(g, m, Uo, Vo, Lo, Ro, source, beta2)
-
-                    def no_refresh(ops):
-                        return ops
-
-                    U, V, L, R = jax.lax.cond(
-                        step % f == 0, do_refresh, no_refresh, (U, V, L, R)
-                    )
+                U, V, L, R = _refresh_ops(
+                    g, m,
+                    (st.get("U"), st.get("V"), st.get("L"), st.get("R")),
+                    f, step, source, beta2,
+                )
                 if kops is not None:
                     g_rot = kops.two_sided_rotate(g, U, V, transpose=True)
                     m_rot = kops.two_sided_rotate(m, U, V, transpose=True)
+                    step_rot, v = kops.adam_scale(
+                        g_rot, m_rot, st["v"], beta2, eps, bc1, bc2
+                    )
+                    upd = -lr * kops.two_sided_rotate(step_rot, U, V, transpose=False)
                 else:
                     g_rot = rotate(g, U, V)
                     m_rot = rotate(m, U, V)
-                v = beta2 * st["v"] + (1 - beta2) * jnp.square(g_rot)
-                step_rot = (m_rot / bc1) / (jnp.sqrt(v / bc2) + eps)
-                if kops is not None:
-                    upd = -lr * kops.two_sided_rotate(step_rot, U, V, transpose=False)
-                else:
+                    v = beta2 * st["v"] + (1 - beta2) * jnp.square(g_rot)
+                    step_rot = (m_rot / bc1) / (jnp.sqrt(v / bc2) + eps)
                     upd = -lr * unrotate(step_rot, U, V)
                 nst["v"] = v
                 if U is not None:

@@ -16,13 +16,29 @@ misalignment mass, so spend the budget there).
 
 ``reversed_allocation`` implements the Fig. 17 ablation (budget allocated
 inversely to delay), which the paper shows *degrades* convergence.
+
+``StageContext`` is the staleness-metadata carrier for the optimizer stack:
+one record per parameter leaf holding the leaf's gradient delay(s) — a scalar
+for leaves owned wholly by one stage (the sim layout, shared/replicated
+leaves) or a length-K tuple for leaves whose LEADING axis is the pipeline
+stage (the SPMD stage-stacked layout). `build_optimizer` derives one from the
+partition and threads it into the frequency allocation (`refresh_freqs`), the
+delay-aware baselines (`delay_scales`), and the delay-FIFO wrapper
+(`delay_specs`). Frequencies are budget-renormalised over the EXPANDED
+canonical leaf multiset, so a stacked `(K, per, m, n)` leaf yields exactly
+the per-(stage, layer) periods the per-layer sim layout would.
 """
 from __future__ import annotations
 
 import math
-from typing import List, Sequence
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple, Union
 
-NEVER = 1 << 30  # effectively "never refresh"
+NEVER = 1 << 30  # finite periods are < NEVER; f >= NEVER means "never refresh"
+
+# Per-leaf delay specification: an int for a leaf owned by one stage, or a
+# tuple of per-stage delays for a leaf whose leading axis is the stage.
+DelaySpec = Union[int, Tuple[int, ...]]
 
 
 def stage_aware_freq(tau: int, num_stages: int, base_freq: int) -> int:
@@ -62,3 +78,81 @@ def freqs_for_delays(
 def budget(freqs: Sequence[int], steps: int) -> float:
     """Total number of basis refreshes over a run (the conserved budget)."""
     return sum(steps / f for f in freqs if f < NEVER)
+
+
+@dataclass(frozen=True)
+class StageContext:
+    """Per-leaf staleness metadata for one parameter layout.
+
+    ``delays[i]`` is leaf i's gradient delay: an int (leaf lives wholly on
+    one stage) or a length-``num_stages`` tuple (leaf's leading axis is the
+    stage). ``repeats[i]`` is how many canonical per-layer leaves each delay
+    entry stands for — 1 for sim/shared leaves, layers-per-stage for stacked
+    block leaves — so budget renormalisation sees the same leaf multiset the
+    per-layer sim layout would.
+    """
+
+    num_stages: int
+    delays: Tuple[DelaySpec, ...]
+    repeats: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.delays) == len(self.repeats)
+
+    def _expanded_delays(self) -> List[int]:
+        out: List[int] = []
+        for d, r in zip(self.delays, self.repeats):
+            taus = d if isinstance(d, tuple) else (d,)
+            out.extend(int(t) for t in taus for _ in range(r))
+        return out
+
+    def refresh_freqs(
+        self, base_freq: int, reversed_allocation: bool = False
+    ) -> List[Union[int, Tuple[int, ...]]]:
+        """Per-leaf refresh-period specs mirroring ``delays``' shapes.
+
+        The budget is renormalised over the expanded canonical multiset, so
+        the period assigned to delay tau is identical whether tau arrives as
+        a scalar (sim leaf) or as one slot of a stacked leaf's tuple.
+        """
+        expanded = self._expanded_delays()
+        flat = freqs_for_delays(
+            expanded, self.num_stages, base_freq, reversed_allocation
+        )
+        lut = dict(zip(expanded, flat))
+        out: List[Union[int, Tuple[int, ...]]] = []
+        for d in self.delays:
+            if isinstance(d, tuple):
+                out.append(tuple(lut[int(t)] for t in d))
+            else:
+                out.append(lut[int(d)])
+        return out
+
+    def delay_specs(self) -> List[Union[int, str]]:
+        """Per-leaf specs for the delay-FIFO wrappers: ``"stage"`` for
+        stage-stacked leaves, the scalar delay otherwise."""
+        return ["stage" if isinstance(d, tuple) else int(d) for d in self.delays]
+
+    def delay_scales(self, params) -> "object":
+        """Pytree matching ``params`` of per-leaf delay values, broadcastable
+        over each leaf: scalar ints for single-stage leaves, a
+        ``(K, 1, ..., 1)`` fp32 array over the leading stage axis for stacked
+        leaves. Consumed by the delay-aware baselines (PipeDream-LR)."""
+        import jax
+        import jax.numpy as jnp
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        assert len(flat) == len(self.delays), "context must match leaf count"
+        leaves = []
+        for p, d in zip(flat, self.delays):
+            if isinstance(d, tuple):
+                assert p.shape[0] == len(d), (
+                    f"stacked leaf leading axis {p.shape} != {len(d)} stages"
+                )
+                arr = jnp.asarray(d, jnp.float32).reshape(
+                    (len(d),) + (1,) * (len(p.shape) - 1)
+                )
+                leaves.append(arr)
+            else:
+                leaves.append(int(d))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -262,9 +262,28 @@ def make_1f1b_grad(
 
             # the last stage seeds its backward from this tick's fresh output
             # (m_b == m_f there); every microbatch contributes ce_m / M, which
-            # equals fill-drain's joint mean when microbatches are full
-            ce, head_vjp = jax.vjp(lambda sh, hh: head_f(sh, hh, lbl_b), shared, h)
-            dsh_head, dh = head_vjp(jnp.float32(1.0 / M))
+            # equals fill-drain's joint mean when microbatches are full. The
+            # O(vocab) head matmul + its vjp run under a lax.cond so only the
+            # last stage pays for them (shard_map stages the body per device,
+            # so the cond lowers to a real branch, not a masked select); the
+            # other stages' head contributions were zero-masked anyway.
+            def head_grads(_):
+                ce, head_vjp = jax.vjp(
+                    lambda sh, hh: head_f(sh, hh, lbl_b), shared, h
+                )
+                dsh_head, dh = head_vjp(jnp.float32(1.0 / M))
+                return ce, dsh_head, dh
+
+            def head_zeros(_):
+                return (
+                    jnp.float32(0.0),
+                    jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shared),
+                    jnp.zeros(h.shape, h.dtype),
+                )
+
+            ce, dsh_head, dh = jax.lax.cond(
+                k == K - 1, head_grads, head_zeros, 0
+            )
             dy = jnp.where(k == K - 1, dh.astype(cdt), bwd_recv)
             dy = jnp.where(do_b, dy, zeros)
 

@@ -33,13 +33,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, OptimizerConfig
-from repro.core.layout import path_str
 from repro.engine.base import EngineState, PipelineEngine
 from repro.engine.schedules import make_fill_drain_loss, make_schedule_grad
+from repro.pipeline.partition import FIRST_STAGE_SHARED, stage_context_for_stacked
 
-# shared params living on the FIRST stage (delay tau = K-1); everything else
-# shared (final norm, LM head) lives on the last stage (tau = 0)
-_FIRST_STAGE_SHARED = ("embed", "pos_emb", "frontend_proj")
+# Backwards-compatible alias; the canonical list lives with the partition
+# helpers (`repro.pipeline.partition.FIRST_STAGE_SHARED`).
+_FIRST_STAGE_SHARED = FIRST_STAGE_SHARED
 
 
 def stack_stage_params(params: Dict, cfg: ModelConfig, num_stages: int) -> Tuple[Dict, Dict]:
@@ -116,16 +116,11 @@ def spmd_delay_specs(
     """Per-leaf delay spec for the (stacked, shared) tuple, ordered like
     ``jax.tree_util.tree_flatten((stacked, shared))``.
 
-    Stage-stacked block leaves get ``"stage"`` (leading axis = stage k, delay
-    tau_k = K-1-k applied inside the FIFO); shared leaves get the delay of the
-    stage that owns them (embedding on stage 0, head/norm on the last).
+    Thin wrapper over `stage_context_for_stacked` — the partition module owns
+    the stacked/shared delay rules; this re-export survives for callers of
+    the pre-StageContext API.
     """
-    specs: List[Union[int, str]] = ["stage"] * len(jax.tree_util.tree_leaves(stacked))
-    flat, _ = jax.tree_util.tree_flatten_with_path(shared)
-    for path, _x in flat:
-        root = path_str(path).split("/")[0]
-        specs.append(num_stages - 1 if root in _FIRST_STAGE_SHARED else 0)
-    return specs
+    return stage_context_for_stacked(stacked, shared, num_stages).delay_specs()
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +138,15 @@ class SpmdEngine(PipelineEngine):
     the delay FIFO. ``async_grads=False`` drops the delay wrapper — the
     synchronous-gradient reference used to cross-check the two backends
     against each other.
+
+    The optimizer is built from a stacked-layout `StageContext`
+    (`stage_context_for_stacked`), so every `build_optimizer` base runs
+    natively on the ``(K, per, ...)`` leaves: stage-aware rotation
+    frequencies vectorize over the leading stage axis, PipeDream-LR scales
+    per stage slice, and delay compensation reads the per-stage stale weight
+    snapshot the FIFO queues (``store_params``). ``use_kernels=True`` routes
+    the basis-rotation matmuls and the fused Adam scale through the Pallas
+    kernels (`repro.kernels.ops`), interpreted off-TPU.
     """
 
     name = "spmd"
@@ -157,6 +161,7 @@ class SpmdEngine(PipelineEngine):
         grad_clip: float = 1.0,
         async_grads: bool = True,
         schedule: str = "fill_drain",
+        use_kernels: bool = False,
     ):
         from repro.launch.mesh import make_pipeline_mesh
         from repro.models.model import init_model
@@ -164,19 +169,6 @@ class SpmdEngine(PipelineEngine):
         from repro.optim.factory import build_optimizer
         from repro.pipeline.delay import stage_delayed_optimizer
 
-        if ocfg.stage_aware:
-            raise NotImplementedError(
-                "stage-aware rotation frequencies are a sim-backend feature; "
-                "the SPMD backend keeps one frequency per stacked leaf"
-            )
-        if ocfg.name in ("pipedream_lr", "delay_compensation"):
-            # these bases consume per-leaf delay maps / stale-param snapshots
-            # that the stage-stacked layout does not provide yet; running them
-            # here would silently degrade to plain Adam semantics
-            raise NotImplementedError(
-                f"optimizer {ocfg.name!r} needs per-leaf delay context that "
-                "the SPMD stacked layout does not expose; use --backend sim"
-            )
         self.cfg = cfg
         self.schedule = schedule
         self.num_stages = K = num_stages
@@ -184,16 +176,19 @@ class SpmdEngine(PipelineEngine):
         self.mesh = mesh if mesh is not None else make_pipeline_mesh(K)
         self.grad_fn = make_pipeline_grad(cfg, self.mesh, K, M, schedule=schedule)
 
-        # delay specs from parameter SHAPES only — no device arrays yet
+        # stage context from parameter SHAPES only — no device arrays yet
         shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
         stacked_s, shared_s = jax.eval_shape(
             lambda p: stack_stage_params(p, cfg, K), shapes
         )
+        ctx = stage_context_for_stacked(stacked_s, shared_s, K)
         base = build_optimizer(ocfg, (stacked_s, shared_s), cfg,
-                               num_stages=K, apply_delay=False)
+                               num_stages=K, apply_delay=False,
+                               use_kernels=use_kernels, stage_context=ctx)
         if async_grads and K > 1:
             self.opt = stage_delayed_optimizer(
-                base, spmd_delay_specs(stacked_s, shared_s, K), K
+                base, ctx.delay_specs(), K,
+                store_params=(ocfg.name == "delay_compensation"),
             )
         else:
             self.opt = base

@@ -34,8 +34,8 @@ def _adam_kernel(scalars_ref, g_ref, m_ref, v_ref, step_ref, v_out_ref):
     m = m_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
     v_new = b2 * v + (1.0 - b2) * g * g
-    step = (m / bc1) * jax.lax.rsqrt(v_new / bc2 + 1e-30)
-    # match the reference denominator (sqrt(v/bc2) + eps) exactly:
+    # denominator matches the reference exactly: sqrt(v/bc2) + eps (an rsqrt
+    # would fold eps inside the root and diverge from ref.py near v ~ 0)
     step = (m / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     step_ref[...] = step.astype(step_ref.dtype)
     v_out_ref[...] = v_new.astype(v_out_ref.dtype)

@@ -25,14 +25,31 @@ def pallas_matmul(a, b, **kw):
     return matmul(a, b, **kw)
 
 
+def _interp_blocks(*dims):
+    """Full-operand block sizes for interpret mode: the interpreter pays a
+    large per-grid-step overhead (slice/mask/trace per tile), so off-TPU one
+    grid step over the whole (small, CPU-scale) operand is ~30x faster than
+    MXU-shaped 128-tiles. Compiled Mosaic keeps the 128 tiling."""
+    return {k: max(d, 1) for k, d in dims}
+
+
 def _rotate2d(x, U, V, transpose: bool, interpret: bool):
     x = x.astype(jnp.float32)
+
+    def mm(a, b):
+        kw = (
+            _interp_blocks(("block_m", a.shape[0]), ("block_n", b.shape[1]),
+                           ("block_k", a.shape[1]))
+            if interpret else {}
+        )
+        return matmul(a, b, interpret=interpret, **kw)
+
     if U is not None:
         Uf = U.astype(jnp.float32)
-        x = matmul(Uf.T if transpose else Uf, x, interpret=interpret)
+        x = mm(Uf.T if transpose else Uf, x)
     if V is not None:
         Vf = V.astype(jnp.float32)
-        x = matmul(x, Vf if transpose else Vf.T, interpret=interpret)
+        x = mm(x, Vf if transpose else Vf.T)
     return x
 
 
@@ -54,7 +71,12 @@ def two_sided_rotate(x, U=None, V=None, *, transpose: bool = True,
 def adam_scale(g, m, v, beta2, eps, bc1, bc2, *, interpret: Optional[bool] = None):
     """Fused (step_dir, v_new); arbitrary leading batch dims."""
     interpret = default_interpret() if interpret is None else interpret
-    fn = functools.partial(fused_adam_scale, interpret=interpret)
+    kw = (
+        _interp_blocks(("block_r", g.shape[-2] if g.ndim >= 2 else 1),
+                       ("block_c", g.shape[-1]))
+        if interpret else {}
+    )
+    fn = functools.partial(fused_adam_scale, interpret=interpret, **kw)
     nbatch = g.ndim - 2
     if g.ndim == 1:
         s, vn = fn(g[None, :], m[None, :], v[None, :], beta2, eps, bc1, bc2)

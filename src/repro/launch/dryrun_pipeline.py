@@ -14,6 +14,7 @@ the production meshes:
 
 Usage: python -m repro.launch.dryrun_pipeline [--multi-pod] [--stages 16]
                                               [--schedule fill_drain|1f1b]
+                                              [--stage-aware] [--use-kernels]
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -43,6 +44,11 @@ def main():
     ap.add_argument("--stages", type=int, default=16)
     ap.add_argument("--microbatches", type=int, default=32)
     ap.add_argument("--schedule", default="fill_drain", choices=SCHEDULES)
+    ap.add_argument("--stage-aware", action="store_true",
+                    help="per-stage basis-refresh periods over the stacked "
+                         "leaves (paper Appendix I on the real runtime)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="Pallas kernel path for the optimizer matmuls")
     ap.add_argument("--arch", default="paper_95m")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -95,16 +101,20 @@ def main():
     )
 
     # async step: pipeline grads + per-stage delayed basis-rotation update
-    # (same composition as SpmdEngine: exact per-stage tau via the diagonal
-    # FIFO, not the old uniform conservative K-1 delay)
-    from repro.core.basis_rotation import basis_rotation_adam
-    from repro.optim.base import make_schedule
+    # (same composition as SpmdEngine: stacked StageContext through the
+    # factory, exact per-stage tau via the diagonal FIFO)
     from repro.pipeline.delay import stage_delayed_optimizer
-    from repro.pipeline.spmd import spmd_delay_specs
+    from repro.pipeline.partition import stage_context_for_stacked
 
-    sched = make_schedule("cosine", 1e-3, 10_000, 0.012)
-    base = basis_rotation_adam(sched, freq=10)
-    opt = stage_delayed_optimizer(base, spmd_delay_specs(stacked_s, shared_s, K), K)
+    ocfg = OptimizerConfig(
+        name="basis_rotation", learning_rate=1e-3, total_steps=10_000,
+        rotation_freq=10, stage_aware=args.stage_aware,
+    )
+    ctx = stage_context_for_stacked(stacked_s, shared_s, K)
+    base = build_optimizer(ocfg, (stacked_s, shared_s), cfg, num_stages=K,
+                           apply_delay=False, use_kernels=args.use_kernels,
+                           stage_context=ctx)
+    opt = stage_delayed_optimizer(base, ctx.delay_specs(), K)
 
     def train_step(stage_params, shared, opt_state, batch, step):
         loss, (gs, gsh) = grad_fn(stage_params, shared, batch)
@@ -138,6 +148,8 @@ def main():
         "stages": K,
         "microbatches": M,
         "schedule": args.schedule,
+        "stage_aware": args.stage_aware,
+        "use_kernels": args.use_kernels,
         "status": "ok",
         "compile_s": round(time.time() - t0, 1),
         "collectives": rf.collectives,

@@ -49,10 +49,14 @@ def parse_args(argv=None):
                     choices=["unilateral", "bilateral"])
     ap.add_argument("--rotation-freq", type=int, default=10)
     ap.add_argument("--stage-aware", action="store_true")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route optimizer matmuls / fused Adam scale through "
+                         "the Pallas kernels (interpret mode off-TPU)")
     ap.add_argument("--weight-prediction", action="store_true")
     ap.add_argument("--no-stash", action="store_true")
     ap.add_argument("--sync", action="store_true",
-                    help="spmd backend: synchronous gradients (no delay FIFO)")
+                    help="synchronous gradients: no delay FIFO on either "
+                         "backend (the cross-backend agreement reference)")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -150,10 +154,15 @@ def main(argv=None):
         engine = SpmdEngine(
             cfg, ocfg, num_stages=args.stages,
             num_microbatches=args.microbatches, async_grads=not args.sync,
-            schedule=args.schedule,
+            schedule=args.schedule, use_kernels=args.use_kernels,
         )
     else:
-        opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages)
+        # --sync drops the simulated delay FIFO (but keeps stage-aware
+        # frequency allocation for K stages) — the same synchronous reference
+        # the spmd backend produces with async_grads=False
+        opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages,
+                              apply_delay=not args.sync,
+                              use_kernels=args.use_kernels)
         sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps,
                               ocfg.warmup_frac)
         dtree = delay_tree(params, cfg, args.stages)

@@ -1,9 +1,16 @@
 """Delay-aware baselines: PipeDream-LR (stage-wise learning-rate scheduling,
 Yang et al. 2021) and Delay Compensation (Zheng et al. 2017, Fig. 19).
 
-Both take a per-leaf delay map (pytree of ints matching params) produced by
-`repro.pipeline.partition.delay_map`, mirroring how each pipeline stage knows
-its own delay in a real deployment.
+Both consume the partition's staleness metadata through `StageContext`
+(`repro.core.stage_aware`): PipeDream-LR takes a pytree of per-leaf delay
+values that BROADCAST over each leaf — scalar ints for leaves owned by one
+stage (the sim layout), ``(K, 1, ..., 1)`` per-stage arrays over the leading
+stage axis for the SPMD stage-stacked layout (`StageContext.delay_scales`) —
+so one stacked ``(K, per, m, n)`` leaf gets a different LR discount per
+stage slice. Delay Compensation reads the stale weight snapshot the delay
+FIFO queues per stage (``aux={"stale_params": ...}``); under the stacked
+layout that snapshot is already the per-stage diagonal read, so the same
+elementwise formula applies per stage slice.
 """
 from __future__ import annotations
 
@@ -22,9 +29,16 @@ def pipedream_lr(
     eps: float = 1e-8,
     power: float = 0.5,
 ) -> Optimizer:
-    """Adam with per-stage LR discount lr_k = lr / (1 + tau_k)^power."""
+    """Adam with per-stage LR discount lr_k = lr / (1 + tau_k)^power.
+
+    ``delays``: pytree matching params whose leaves broadcast against the
+    corresponding parameter leaf (ints, or per-stage arrays shaped
+    ``(K, 1, ..., 1)`` for stage-stacked leaves).
+    """
     inner = adam(schedule, beta1, beta2, eps)
-    scales = jax.tree.map(lambda t: (1.0 + float(t)) ** (-power), delays)
+    scales = jax.tree.map(
+        lambda t: (1.0 + jnp.asarray(t, jnp.float32)) ** (-power), delays
+    )
 
     def update(grads, state, params, step, aux=None):
         updates, state = inner.update(grads, state, params, step)

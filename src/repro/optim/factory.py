@@ -1,18 +1,20 @@
 """Build optimizers (paper method + all baselines) from OptimizerConfig,
-wiring in the pipeline partition's delay maps and the stage-aware frequency
-schedule."""
+wiring the pipeline partition's staleness metadata — one `StageContext` per
+parameter layout — into the stage-aware frequency schedule, the delay-aware
+baselines, and the delay-FIFO wrapper.
+"""
 from __future__ import annotations
 
 from typing import Any, Optional
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core.basis_rotation import basis_rotation_adam
-from repro.core.stage_aware import freqs_for_delays
+from repro.core.stage_aware import StageContext
 from repro.optim.adam import adam, adasgd, nesterov_adam
 from repro.optim.base import Optimizer, make_schedule
 from repro.optim.delay_aware import delay_compensation, pipedream_lr
 from repro.pipeline.delay import delayed_optimizer
-from repro.pipeline.partition import delay_tree, leaf_delays
+from repro.pipeline.partition import stage_context_for_tree
 
 
 def build_optimizer(
@@ -22,15 +24,23 @@ def build_optimizer(
     num_stages: int = 1,
     apply_delay: bool = True,
     use_kernels: bool = False,
+    stage_context: Optional[StageContext] = None,
 ) -> Optimizer:
     """Compose base optimizer + (optionally) the gradient-staleness wrapper.
+
+    ``stage_context`` carries the per-leaf delay/stage metadata; by default
+    it is derived from the per-layer partition of ``params``
+    (`stage_context_for_tree`). The SPMD engine passes
+    `stage_context_for_stacked` so stacked ``(K, per, ...)`` leaves get
+    per-stage delay arrays and refresh-period tuples instead of scalars.
 
     ``apply_delay=False`` builds the bare optimizer for the distributed
     runtime, where staleness is physical (pipeline schedule), not simulated.
     """
     sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps, ocfg.warmup_frac)
-    delays = leaf_delays(params, model_cfg, num_stages)
-    dtree = delay_tree(params, model_cfg, num_stages)
+    ctx = stage_context if stage_context is not None else stage_context_for_tree(
+        params, model_cfg, num_stages
+    )
 
     name = ocfg.name
     if name in ("adam", "adamw", "pipedream"):
@@ -40,7 +50,9 @@ def build_optimizer(
     elif name == "nesterov":
         base = nesterov_adam(sched, ocfg.nesterov_beta, ocfg.beta2, ocfg.eps)
     elif name == "pipedream_lr":
-        base = pipedream_lr(sched, dtree, ocfg.beta1, ocfg.beta2, ocfg.eps)
+        base = pipedream_lr(
+            sched, ctx.delay_scales(params), ocfg.beta1, ocfg.beta2, ocfg.eps
+        )
     elif name == "delay_compensation":
         base = delay_compensation(sched, ocfg.dc_lambda, ocfg.beta1, ocfg.beta2, ocfg.eps)
     elif name == "muon":
@@ -53,9 +65,7 @@ def build_optimizer(
         base = scion(sched)
     elif name == "basis_rotation":
         if ocfg.stage_aware and num_stages > 1:
-            freq = freqs_for_delays(
-                delays, num_stages, ocfg.rotation_freq, ocfg.stage_aware_reversed
-            )
+            freq = ctx.refresh_freqs(ocfg.rotation_freq, ocfg.stage_aware_reversed)
         else:
             freq = ocfg.rotation_freq
         base = basis_rotation_adam(
@@ -73,6 +83,11 @@ def build_optimizer(
         raise ValueError(f"unknown optimizer {name}")
 
     if apply_delay and num_stages > 1:
+        delays = ctx.delay_specs()
+        assert all(isinstance(d, int) for d in delays), (
+            "the per-leaf FIFO wrapper needs scalar delays; stage-stacked "
+            "layouts apply staleness via stage_delayed_optimizer instead"
+        )
         base = delayed_optimizer(
             base, delays, store_params=(name == "delay_compensation")
         )

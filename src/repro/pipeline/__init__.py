@@ -4,6 +4,8 @@ from repro.pipeline.partition import (
     layer_to_stage,
     leaf_delays,
     leaf_stages,
+    stage_context_for_stacked,
+    stage_context_for_tree,
 )
 from repro.pipeline.simulate import (
     make_sim_train_step,
@@ -18,6 +20,8 @@ __all__ = [
     "layer_to_stage",
     "leaf_delays",
     "leaf_stages",
+    "stage_context_for_stacked",
+    "stage_context_for_tree",
     "make_sim_train_step",
     "predict_weights",
     "run_sim_training",

@@ -104,12 +104,14 @@ def stage_delayed_optimizer(
     inner: Optimizer,
     specs: Sequence,
     num_stages: int,
+    store_params: bool = False,
 ) -> Optimizer:
     """Delay wrapper for the SPMD stage-stacked parameter layout.
 
     ``specs`` is per-leaf (ordered like ``tree_flatten``): either an int delay
     (shared/replicated leaves — identical to ``delayed_optimizer``) or the
-    string ``"stage"`` for leaves whose LEADING axis is the pipeline stage.
+    string ``"stage"`` for leaves whose LEADING axis is the pipeline stage
+    (``StageContext.delay_specs`` produces exactly this list).
 
     For a ``"stage"`` leaf of shape (K, ...), a FIFO of depth K-1 holds the
     last K-1 full gradients; stage k pops the one from tau_k = K-1-k steps
@@ -120,6 +122,13 @@ def stage_delayed_optimizer(
 
     During warm-up (t < tau_k) stage k receives zeros, matching the per-leaf
     FIFO semantics of the simulator.
+
+    ``store_params=True`` additionally queues parameter snapshots with the
+    same diagonal read, so stage k sees its own w_{t-tau_k} — the stale
+    weight version delay compensation linearises around
+    (``aux={"stale_params": ...}``). Param queues warm-start with the current
+    parameters (during warm-up the "stale" weights ARE the initial weights),
+    mirroring ``delayed_optimizer``.
     """
     K = int(num_stages)
     specs = list(specs)
@@ -129,13 +138,35 @@ def stage_delayed_optimizer(
             return jnp.zeros((K - 1,) + p.shape, jnp.float32) if K > 1 else None
         return jnp.zeros((int(s),) + p.shape, jnp.float32) if int(s) > 0 else None
 
+    def _p_queue(p, s):
+        depth = (K - 1) if s == "stage" else int(s)
+        if depth <= 0:
+            return None
+        return jnp.broadcast_to(p.astype(jnp.float32), (depth,) + p.shape)
+
+    def _pop_push(q, fresh, s):
+        """(stale, new_queue) under spec ``s``; fresh is the step's value."""
+        if s == "stage":
+            # pop: stage k reads the entry pushed K-1-k steps ago (row k),
+            # restricted to its own stage slice -> queue diagonal; one
+            # gather keeps the traced step O(1) in K
+            idx = jnp.arange(K - 1)
+            diag = q[idx, idx]
+            stale = jnp.concatenate([diag, fresh[K - 1 :].astype(q.dtype)], axis=0)
+            new_q = jnp.concatenate([q[1:], fresh[None].astype(q.dtype)], axis=0)
+            return stale, new_q
+        return _push_pop(q, fresh)
+
     def init(params):
         flat, _ = jax.tree_util.tree_flatten(params)
         assert len(flat) == len(specs), "delay-spec list must match leaf count"
-        return {
+        state = {
             "inner": inner.init(params),
             "grad_q": [_q_shape(p, s) for p, s in zip(flat, specs)],
         }
+        if store_params:
+            state["param_q"] = [_p_queue(p, s) for p, s in zip(flat, specs)]
+        return state
 
     def update(grads, state, params, step, aux=None):
         gflat, gdef = jax.tree_util.tree_flatten(grads)
@@ -145,30 +176,36 @@ def stage_delayed_optimizer(
             if q is None:
                 delayed.append(g)
                 new_gq.append(None)
-            elif s == "stage":
-                # pop: stage k reads the grad pushed K-1-k steps ago (row k),
-                # restricted to its own stage slice -> queue diagonal; one
-                # gather keeps the traced step O(1) in K
-                idx = jnp.arange(K - 1)
-                diag = q[idx, idx]
-                delayed.append(
-                    jnp.concatenate([diag, g[K - 1 :].astype(q.dtype)], axis=0)
-                )
-                new_gq.append(
-                    jnp.concatenate([q[1:], g[None].astype(q.dtype)], axis=0)
-                )
             else:
-                old, nq = _push_pop(q, g)
+                old, nq = _pop_push(q, g, s)
                 delayed.append(old)
                 new_gq.append(nq)
         delayed_tree = jax.tree_util.tree_unflatten(gdef, delayed)
+
+        inner_aux = dict(aux or {})
+        new_state = {"grad_q": new_gq}
+        if store_params:
+            pflat, _ = jax.tree_util.tree_flatten(params)
+            stale, new_pq = [], []
+            for p, q, s in zip(pflat, state["param_q"], specs):
+                if q is None:
+                    stale.append(p)
+                    new_pq.append(None)
+                else:
+                    old, nq = _pop_push(q, p, s)
+                    stale.append(old)
+                    new_pq.append(nq)
+            inner_aux["stale_params"] = jax.tree_util.tree_unflatten(gdef, stale)
+            new_state["param_q"] = new_pq
+
         try:
             updates, inner_state = inner.update(
-                delayed_tree, state["inner"], params, step, aux=aux
+                delayed_tree, state["inner"], params, step, aux=inner_aux or None
             )
         except TypeError:
             updates, inner_state = inner.update(delayed_tree, state["inner"], params, step)
-        return updates, {"inner": inner_state, "grad_q": new_gq}
+        new_state["inner"] = inner_state
+        return updates, new_state
 
     return Optimizer(init, update)
 

@@ -14,6 +14,11 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.layout import path_str
+from repro.core.stage_aware import StageContext
+
+# shared params living on the FIRST stage (delay tau = K-1); everything else
+# shared (final norm, LM head) lives on the last stage (tau = 0)
+FIRST_STAGE_SHARED = ("embed", "pos_emb", "frontend_proj")
 
 
 def layer_to_stage(num_layers: int, num_stages: int) -> List[int]:
@@ -55,3 +60,51 @@ def delay_tree(params: Any, cfg: ModelConfig, num_stages: int) -> Any:
     flat, treedef = jax.tree_util.tree_flatten(params)
     delays = leaf_delays(params, cfg, num_stages)
     return jax.tree_util.tree_unflatten(treedef, delays)
+
+
+# ---------------------------------------------------------------------------
+# StageContext constructors — the two parameter layouts
+# ---------------------------------------------------------------------------
+
+
+def stage_context_for_tree(
+    params: Any, cfg: ModelConfig, num_stages: int
+) -> StageContext:
+    """Per-layer (sim) layout: every leaf lives wholly on one stage, so each
+    delay is the scalar tau = K-1-stage of its owner."""
+    return StageContext(
+        num_stages=num_stages,
+        delays=tuple(leaf_delays(params, cfg, num_stages)),
+        repeats=(1,) * len(jax.tree_util.tree_leaves(params)),
+    )
+
+
+def stage_context_for_stacked(
+    stacked: Any, shared: Any, num_stages: int
+) -> StageContext:
+    """SPMD stage-stacked layout for the ``(stacked, shared)`` tuple.
+
+    Stacked block leaves have shape ``(K, per, ...)``: per-stage delays
+    ``(K-1, ..., 0)`` over the leading axis, each slot standing for ``per``
+    canonical per-layer leaves. Shared leaves get the delay of the stage that
+    owns them (embedding with stage 0, final norm / head with the last).
+    """
+    K = num_stages
+    stage_delays = tuple(K - 1 - k for k in range(K))
+    sflat = jax.tree_util.tree_leaves(stacked)
+    pers = {int(x.shape[1]) for x in sflat if len(x.shape) > 1}
+    assert len(pers) <= 1 and all(int(x.shape[0]) == K for x in sflat), (
+        f"stacked leaves must share a (K={K}, per, ...) leading layout, got "
+        f"{[tuple(x.shape) for x in sflat]}"
+    )
+    per = pers.pop() if pers else 1
+    delays: List = [stage_delays] * len(sflat)
+    repeats: List[int] = [per] * len(sflat)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shared)
+    for path, _x in flat:
+        root = path_str(path).split("/")[0]
+        delays.append(K - 1 if root in FIRST_STAGE_SHARED else 0)
+        repeats.append(1)
+    return StageContext(
+        num_stages=K, delays=tuple(delays), repeats=tuple(repeats)
+    )

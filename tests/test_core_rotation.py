@@ -14,7 +14,13 @@ from repro.core import (
     unrotate,
 )
 from repro.core.rotation import batched_eye, gram_left, gram_right, refresh_basis
-from repro.core.stage_aware import NEVER, budget, freqs_for_delays, stage_aware_freq
+from repro.core.stage_aware import (
+    NEVER,
+    StageContext,
+    budget,
+    freqs_for_delays,
+    stage_aware_freq,
+)
 from repro.optim import adam, constant_schedule
 
 
@@ -157,3 +163,90 @@ def test_stage_aware_reversed_allocation():
     fwd = freqs_for_delays(delays, 4, 10)
     rev = freqs_for_delays(delays, 4, 10, reversed_allocation=True)
     assert fwd == list(reversed(rev))
+
+
+def test_per_stage_refresh_mask_selective():
+    """A stacked (K, m, n) leaf with per-stage periods [1, NEVER] refreshes
+    exactly stage 0's basis every step; stage 1's basis stays identity."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (2, 16, 16))}
+    opt = basis_rotation_adam(constant_schedule(1e-2), freq=[(1, NEVER)])
+    s = opt.init(params)
+    eye = jnp.eye(16)
+    for t in range(3):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(10 + t), (2, 16, 16))}
+        _, s = opt.update(g, s, params, jnp.int32(t))
+        U, V = s["leaves"][0]["U"], s["leaves"][0]["V"]
+        assert float(jnp.max(jnp.abs(U[0] - eye))) > 1e-3, f"step {t}"
+        np.testing.assert_array_equal(np.asarray(U[1]), np.asarray(eye))
+        np.testing.assert_array_equal(np.asarray(V[1]), np.asarray(eye))
+        # the non-refreshing stage's Fisher EMA must not advance either
+        np.testing.assert_array_equal(
+            np.asarray(s["leaves"][0]["L"][1]), np.zeros((16, 16), np.float32)
+        )
+
+
+def test_per_stage_uniform_freqs_match_scalar_path():
+    """The vectorized per-stage mask with one period on every stage must
+    reproduce the scalar lax.cond path (the sim backend's entry) exactly."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (2, 16, 24))}
+    sched = constant_schedule(1e-2)
+    opt_scalar = basis_rotation_adam(sched, freq=3)
+    opt_tuple = basis_rotation_adam(sched, freq=[(3, 3)])
+    s1, s2 = opt_scalar.init(params), opt_tuple.init(params)
+    for t in range(7):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(20 + t), (2, 16, 24))}
+        u1, s1 = opt_scalar.update(g, s1, params, jnp.int32(t))
+        u2, s2 = opt_tuple.update(g, s2, params, jnp.int32(t))
+        np.testing.assert_array_equal(np.asarray(u1["w"]), np.asarray(u2["w"]))
+
+
+def test_never_freq_never_refreshes():
+    """Periods >= NEVER mean literally never — including step 0 — so the
+    'never refresh' stages of the stage-aware allocation keep identity bases
+    on both the scalar and the vectorized path."""
+    key = jax.random.PRNGKey(3)
+    params = {"w": jax.random.normal(key, (16, 16))}
+    opt = basis_rotation_adam(constant_schedule(1e-2), freq=NEVER)
+    s = opt.init(params)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(4), (16, 16))}
+    _, s = opt.update(g, s, params, jnp.int32(0))
+    np.testing.assert_array_equal(
+        np.asarray(s["leaves"][0]["U"]), np.asarray(jnp.eye(16))
+    )
+
+
+def test_stage_context_freqs_match_sim_multiset():
+    """The stacked layout's per-stage periods equal the per-layer sim
+    layout's: budget renormalisation over the expanded canonical multiset
+    assigns the same period to the same delay on both layouts."""
+    K, per = 4, 3
+    # sim layout: per-layer scalar leaves (K*per block leaves + 2 shared)
+    sim_delays = tuple(
+        K - 1 - (l // per) for l in range(K * per)
+    ) + (K - 1, 0)
+    ctx_sim = StageContext(K, sim_delays, (1,) * len(sim_delays))
+    # stacked layout: one (K, per, ...) leaf + the same 2 shared leaves
+    stage_delays = tuple(K - 1 - k for k in range(K))
+    ctx_stacked = StageContext(K, (stage_delays, K - 1, 0), (per, 1, 1))
+    for base in (2, 5, 10):
+        fs = ctx_sim.refresh_freqs(base)
+        fstk = ctx_stacked.refresh_freqs(base)
+        lut_sim = dict(zip(sim_delays, fs))
+        lut_stk = dict(zip(stage_delays, fstk[0]))
+        for tau in stage_delays:
+            assert lut_sim[tau] == lut_stk[tau], (base, tau)
+        assert fstk[1] == lut_sim[K - 1] and fstk[2] == lut_sim[0]
+
+
+def test_stage_context_delay_specs_and_scales():
+    ctx = StageContext(3, ((2, 1, 0), 2, 0), (2, 1, 1))
+    assert ctx.delay_specs() == ["stage", 2, 0]
+    params = (jnp.zeros((3, 2, 4, 4)), {"e": jnp.zeros((4,)), "h": jnp.zeros((4,))})
+    scales = ctx.delay_scales(params)
+    assert scales[0].shape == (3, 1, 1, 1)
+    np.testing.assert_array_equal(
+        np.asarray(scales[0]).reshape(-1), np.asarray([2.0, 1.0, 0.0])
+    )
+    assert scales[1]["e"] == 2 and scales[1]["h"] == 0

@@ -52,6 +52,29 @@ def test_fused_adam_scale_sweep(shape):
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("shape,blocks", [((64, 64), (64, 64)),
+                                          ((100, 70), (64, 64)),
+                                          ((17, 33), (256, 256))])
+def test_fused_adam_scale_kernel_parity_interpret(shape, blocks):
+    """The Pallas kernel body itself (interpret mode, padded tiles included)
+    against the ref.py oracle — guards the kernel's arithmetic, not just the
+    ops.py wrapper: the step denominator must be sqrt(v/bc2) + eps exactly."""
+    g = jax.random.normal(KEY, shape)
+    m = jax.random.normal(jax.random.PRNGKey(1), shape)
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), shape)) + 1e-4
+    from repro.kernels.adam_step import fused_adam_scale
+
+    s1, v1 = fused_adam_scale(g, m, v, 0.999, 1e-8, 0.9, 0.1,
+                              block_r=blocks[0], block_c=blocks[1],
+                              interpret=True)
+    s2, v2 = ref.fused_adam_scale_ref(g, m, v, 0.999, 1e-8, 0.9, 0.1)
+    # scalars reach the kernel as fp32 (SMEM), so (1 - beta2) differs from
+    # the reference's double constant in the last ulp — tolerance covers
+    # that, not an algorithmic gap
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=2e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("window", [None, 100, 32])
 @pytest.mark.parametrize("S,bq,bk", [(256, 64, 64), (128, 128, 32)])
 def test_flash_attention_sweep(window, S, bq, bk):

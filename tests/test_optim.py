@@ -76,6 +76,21 @@ def test_pipedream_lr_scales_with_delay():
     )  # (1+8)^0.5 = 3
 
 
+def test_pipedream_lr_per_stage_arrays():
+    """Stage-stacked leaves take a (K, 1, ...) per-stage delay array: each
+    stage slice of one leaf gets its own LR discount."""
+    sched = constant_schedule(0.1)
+    delays = {"w": jnp.asarray([[8.0], [0.0]])}  # (K=2, 1) broadcast over (2, n)
+    opt = pipedream_lr(sched, delays, power=0.5)
+    p = {"w": jnp.ones((2, 4))}
+    g = {"w": jnp.ones((2, 4))}
+    s = opt.init(p)
+    u, _ = opt.update(g, s, p, jnp.int32(0))
+    np.testing.assert_allclose(
+        np.asarray(u["w"][0]) * 3.0, np.asarray(u["w"][1]), rtol=1e-5
+    )  # (1+8)^0.5 = 3 between the two stage slices of ONE leaf
+
+
 def test_delay_compensation_uses_stale_params():
     sched = constant_schedule(0.1)
     opt = delay_compensation(sched, lam=1.0, beta1=0.0, beta2=0.0)
