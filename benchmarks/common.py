@@ -76,6 +76,79 @@ def train_curve(
     return {"losses": losses, "us_per_step": 1e6 * dt / steps}
 
 
+SPMD_CURVES_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(devices)d"
+import sys
+sys.path.insert(0, "src")
+import json, time
+import jax
+from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec, OptimizerConfig
+from repro.data import batches
+from repro.engine import LoopConfig, SpmdEngine, run_loop
+from repro.launch.topology import Topology
+from repro.models import init_model
+
+runs = %(runs)s
+out = []
+for r in runs:
+    cfg = ModelConfig(
+        name="bench_lm", num_layers=r["num_layers"], d_model=64, d_ff=256,
+        vocab_size=128, max_seq_len=64,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),), norm="layernorm", mlp_act="gelu",
+        learnable_pos_emb=True, scan_layers=False)
+    K = r["stages"]
+    ocfg = OptimizerConfig(name=r["name"], learning_rate=r["lr"],
+                           total_steps=r["steps"], rotation_freq=r["rotation_freq"],
+                           **r["okw"])
+    engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=K,
+                        topology=Topology(stages=K, data=1))
+    params = init_model(jax.random.PRNGKey(r["seed"]), cfg)
+    state = engine.init_state(params=params)
+    data = batches(cfg, r["batch"], r["seq"], seed=r["seed"])
+    t0 = time.perf_counter()
+    state, losses = run_loop(engine, data, LoopConfig(steps=r["steps"]), state=state)
+    dt = time.perf_counter() - t0
+    out.append({"losses": losses, "us_per_step": 1e6 * dt / r["steps"]})
+print(json.dumps(out))
+"""
+
+
+def spmd_train_curves(runs: List[Dict]) -> List[Dict]:
+    """Run `train_curve`-style async trainings on the SPMD backend.
+
+    Each run dict: {name, stages, steps, num_layers, lr, seed, batch, seq,
+    rotation_freq, okw}. All runs execute in ONE subprocess with
+    ``max(stages)`` forced host devices (smaller stage counts use a device
+    prefix), so the engine-driven fig5/fig6 sweeps cross-validate the sim
+    convergence claims on the real shard_map runtime without a process per
+    point. Staleness matches the sim path: the per-stage delay FIFO on the
+    stage-stacked layout == the simulator's per-leaf FIFO.
+    """
+    import json
+    import os
+    import subprocess
+
+    defaults = {"num_layers": 8, "lr": 3e-3, "seed": 0, "batch": 8, "seq": 32,
+                "rotation_freq": 5, "okw": {}}
+    runs = [{**defaults, **r} for r in runs]
+    script = SPMD_CURVES_SCRIPT % {
+        "devices": max(r["stages"] for r in runs),
+        "runs": repr(runs),
+    }
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=3600,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"spmd curve subprocess failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def iters_to_loss(losses: Sequence[float], target: float) -> Optional[int]:
     run_min = float("inf")
     for i, l in enumerate(losses):

@@ -2,14 +2,20 @@
 
 Runs every method at P in {1, 8} (quick) or {1, 4, 8, 16} (full) on the
 reduced LM and reports final losses + slowdown (iterations to the target loss
-at max P relative to P=1)."""
+at max P relative to P=1).
+
+``--backend spmd`` runs the same sweep on the shard_map pipeline runtime
+(`SpmdEngine` in a subprocess with forced host devices, staleness imposed by
+the per-stage delay FIFO) and reports the sim final next to the SPMD final —
+the engine-driven cross-validation of the convergence claims.
+"""
 from __future__ import annotations
 
 import sys
 
 sys.path.insert(0, "src")
 
-from benchmarks.common import slowdown, tail, train_curve
+from benchmarks.common import slowdown, spmd_train_curves, tail, train_curve
 
 METHODS = ["adam", "pipedream_lr", "nesterov", "basis_rotation"]
 
@@ -37,7 +43,45 @@ def run(quick: bool = True):
     return rows
 
 
+def run_spmd(quick: bool = True, smoke: bool = False):
+    """The same sweep on `SpmdEngine`, each point cross-checked vs the sim."""
+    stages = [1, 4] if (quick or smoke) else [1, 4, 8]
+    steps = 20 if smoke else (100 if quick else 300)
+    runs = [{"name": m, "stages": p, "steps": steps}
+            for m in METHODS for p in stages]
+    spmd = spmd_train_curves(runs)
+    rows = []
+    for i, m in enumerate(METHODS):
+        derived = []
+        us = 0.0
+        for j, p in enumerate(stages):
+            got = spmd[i * len(stages) + j]
+            sim = train_curve(m, stages=p, steps=steps)
+            us = got["us_per_step"]
+            derived.append(
+                f"final_P{p}={tail(got['losses']):.3f}"
+                f";sim_P{p}={tail(sim['losses']):.3f}"
+            )
+        rows.append({
+            "name": f"fig5/spmd_{m}",
+            "us_per_call": us,
+            "derived": ";".join(derived),
+        })
+    return rows
+
+
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "spmd"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep / few steps (CI)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.backend == "spmd":
+        emit(run_spmd(quick=not args.full, smoke=args.smoke))
+    else:
+        emit(run(quick=not args.full))

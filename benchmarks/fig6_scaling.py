@@ -2,14 +2,21 @@
 
 Baselines invert the scaling law under async pipelining (bigger model =>
 HIGHER loss); basis rotation restores it. Derived metric: final loss at each
-(blocks == stages) size."""
+(blocks == stages) size.
+
+``--backend spmd`` runs the sweep on the shard_map pipeline runtime with the
+per-stage delay FIFO, reporting the sim final beside each SPMD final — the
+scaling-trend cross-validation on the real engine.
+"""
 from __future__ import annotations
 
 import sys
 
 sys.path.insert(0, "src")
 
-from benchmarks.common import BENCH_MODEL, tail, train_curve
+from benchmarks.common import BENCH_MODEL, spmd_train_curves, tail, train_curve
+
+SPMD_METHODS = ("adam", "basis_rotation")
 
 
 def run(quick: bool = True):
@@ -34,7 +41,50 @@ def run(quick: bool = True):
     return rows
 
 
+def run_spmd(quick: bool = True, smoke: bool = False):
+    sizes = [4, 8] if (quick or smoke) else [4, 8, 16]
+    steps = 20 if smoke else (100 if quick else 300)
+    # M = stages, so the global batch must reach the microbatch count
+    runs = [{"name": m, "stages": L, "num_layers": L, "steps": steps,
+             "batch": max(8, L)}
+            for m in SPMD_METHODS for L in sizes]
+    spmd = spmd_train_curves(runs)
+    rows = []
+    for i, m in enumerate(SPMD_METHODS):
+        finals, sim_finals = {}, {}
+        us = 0.0
+        for j, L in enumerate(sizes):
+            got = spmd[i * len(sizes) + j]
+            finals[L] = tail(got["losses"])
+            sim = train_curve(m, stages=L, steps=steps,
+                              cfg=BENCH_MODEL.replace(num_layers=L),
+                              batch=max(8, L))
+            sim_finals[L] = tail(sim["losses"])
+            us = got["us_per_step"]
+        trend = finals[sizes[-1]] - finals[sizes[0]]
+        rows.append({
+            "name": f"fig6/spmd_{m}",
+            "us_per_call": us,
+            "derived": ";".join(
+                f"final_L{k}={v:.3f};sim_L{k}={sim_finals[k]:.3f}"
+                for k, v in finals.items()
+            ) + f";scaling_delta={trend:+.3f}",
+        })
+    return rows
+
+
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "spmd"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep / few steps (CI)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.backend == "spmd":
+        emit(run_spmd(quick=not args.full, smoke=args.smoke))
+    else:
+        emit(run(quick=not args.full))

@@ -1,3 +1,13 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import (
+    load_checkpoint,
+    save_checkpoint,
+    save_sharded_checkpoint,
+    stage_shard_axes,
+)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = [
+    "load_checkpoint",
+    "save_checkpoint",
+    "save_sharded_checkpoint",
+    "stage_shard_axes",
+]

@@ -3,16 +3,36 @@
 Handles arbitrary nesting of dicts / lists / tuples / None with jnp or numpy
 leaves. Restores exact dtypes and shapes; round-trips optimizer states
 (including the basis-rotation leaf list and delay-FIFO queues) and params.
+
+Two on-disk formats behind the same `load_checkpoint`:
+
+* **gathered** (`save_checkpoint`): one arrays file holding every leaf —
+  the single-host format.
+* **sharded** (`save_sharded_checkpoint`): one arrays file per pipeline-stage
+  shard. Each stage-sharded leaf (detected from its `NamedSharding`, or
+  given explicitly) is sliced along its stage axis across the shard files;
+  replicated leaves live in shard 0 only. The manifest records per-leaf
+  shard axes, so loading reassembles the global tree regardless of the
+  topology it is reloaded under — save on (pod=1, data=2), resume on
+  (pod=2, data=1).
+
+Both formats share the atomic-save discipline: every arrays file is written
+to a temp name and `os.replace`d into a step-versioned name, and the
+manifest — swapped in LAST — is the single commit point. A crash anywhere
+mid-save leaves the previous manifest pointing at the previous (complete)
+file set.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+STAGE_AXIS_NAME = "stage"
 
 
 def _spec(tree: Any, prefix: str = "") -> Any:
@@ -53,15 +73,165 @@ def save_checkpoint(path: str, tree: Any, step: int = 0, meta: Dict | None = Non
         json.dump(manifest, f)
     os.replace(arrays_tmp, os.path.join(path, arrays_name))
     os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
-    for name in os.listdir(path):  # drop superseded array files
-        if name != arrays_name and (
-            name == "arrays.npz"
-            or (name.startswith("arrays-") and name.endswith(".npz"))
-        ):
+    _gc_array_files(path, keep={arrays_name})
+
+
+def _gc_array_files(path: str, keep: set) -> None:
+    """Drop array files superseded by a just-committed manifest (both the
+    gathered and the sharded naming schemes), plus temp files stranded by an
+    interrupted earlier save."""
+    for name in os.listdir(path):
+        if name in keep:
+            continue
+        stale = name == "arrays.npz" or (
+            name.startswith("arrays-") and name.endswith(".npz")
+        ) or (name.startswith(".arrays") and name.endswith(".tmp.npz"))
+        if stale:
             try:
                 os.remove(os.path.join(path, name))
             except OSError:  # pragma: no cover — another writer raced us
                 pass
+
+
+# ---------------------------------------------------------------------------
+# Stage-sharded format
+# ---------------------------------------------------------------------------
+
+
+def stage_shard_axes(
+    tree: Any, axis_name: str = STAGE_AXIS_NAME, num_shards: int = 0
+) -> List[Optional[int]]:
+    """Per-leaf shard axis (ordered like ``tree_flatten``), read off each
+    leaf's `NamedSharding`: the first array dimension whose partition spec
+    mentions ``axis_name``, or None for leaves the runtime replicates.
+
+    Leaves whose detected axis is not divisible by ``num_shards`` degrade to
+    None (stored replicated) — the shard layout is a storage optimisation,
+    never a correctness requirement.
+    """
+    axes: List[Optional[int]] = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        ax = None
+        spec = getattr(getattr(leaf, "sharding", None), "spec", None)
+        if spec is not None:
+            for i, part in enumerate(spec):
+                names = part if isinstance(part, tuple) else (part,)
+                if axis_name in names:
+                    ax = i
+                    break
+        if ax is not None and num_shards > 0 and (
+            ax >= leaf.ndim or leaf.shape[ax] % num_shards != 0
+        ):
+            ax = None
+        axes.append(ax)
+    return axes
+
+
+def _shard_file_name(step: int, shard: int, num_shards: int, gen: int = 0) -> str:
+    suffix = f"-g{gen}" if gen else ""
+    return f"arrays-{step:08d}-shard{shard:05d}-of-{num_shards:05d}{suffix}.npz"
+
+
+def save_sharded_checkpoint(
+    path: str,
+    tree: Any,
+    num_shards: int,
+    step: int = 0,
+    meta: Dict | None = None,
+    shard_axes: Optional[Sequence[Optional[int]]] = None,
+    axis_name: str = STAGE_AXIS_NAME,
+) -> None:
+    """Per-stage-shard checkpoint: no gather-to-host of the sharded state.
+
+    Shard file s holds, for every leaf with a shard axis, slice s of
+    ``num_shards`` along that axis (stage-stacked params/moments slice on
+    axis 0, the delay-FIFO queues on their stage axis); shard 0 additionally
+    holds the replicated leaves (shared params, scalar counters). The
+    manifest is written last and names the full file set, so interrupted
+    saves leave the previous checkpoint loadable (`load_checkpoint` serves
+    both this and the gathered format).
+
+    ``shard_axes`` overrides the per-leaf axis detection (ints or None,
+    ``tree_flatten`` order); by default axes are read from each leaf's
+    `NamedSharding` via `stage_shard_axes`.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    os.makedirs(path, exist_ok=True)
+    leaves = jax.tree_util.tree_leaves(tree)
+    if shard_axes is None:
+        shard_axes = stage_shard_axes(tree, axis_name, num_shards)
+    shard_axes = list(shard_axes)
+    assert len(shard_axes) == len(leaves), "shard_axes must match leaf count"
+    for i, (leaf, ax) in enumerate(zip(leaves, shard_axes)):
+        if ax is not None and (
+            ax >= leaf.ndim or leaf.shape[ax] % num_shards != 0
+        ):
+            raise ValueError(
+                f"leaf {i}: axis {ax} of shape {leaf.shape} is not divisible "
+                f"into {num_shards} shards"
+            )
+
+    # never overwrite committed files in place: if this step was saved before
+    # (re-run into an old dir, run_loop's final-step double save), pick fresh
+    # names so a crash mid-save cannot leave the old manifest pointing at a
+    # mixed old/new shard set; the superseded files are GC'd after the
+    # manifest commit
+    gen = 0
+    while any(
+        os.path.exists(os.path.join(path, _shard_file_name(step, s, num_shards, gen)))
+        for s in range(num_shards)
+    ):
+        gen += 1
+    shard_files = [
+        _shard_file_name(step, s, num_shards, gen) for s in range(num_shards)
+    ]
+    for s in range(num_shards):
+        arrays = {}
+        for i, (leaf, ax) in enumerate(zip(leaves, shard_axes)):
+            if ax is None:
+                if s == 0:
+                    arrays[f"leaf_{i}"] = np.asarray(leaf)
+            else:
+                width = leaf.shape[ax] // num_shards
+                sl = [slice(None)] * leaf.ndim
+                sl[ax] = slice(s * width, (s + 1) * width)
+                # slicing the global jax.Array pulls only this shard's piece
+                arrays[f"leaf_{i}"] = np.asarray(leaf[tuple(sl)])
+        tmp = os.path.join(path, f".arrays.shard{s:05d}.tmp.npz")
+        np.savez(tmp, **arrays)
+        os.replace(tmp, os.path.join(path, shard_files[s]))
+
+    manifest = {
+        "format": "sharded",
+        "spec": _spec(tree),
+        "num_leaves": len(leaves),
+        "num_shards": num_shards,
+        "shard_axes": shard_axes,
+        "shard_files": shard_files,
+        "step": step,
+        "meta": meta or {},
+    }
+    manifest_tmp = os.path.join(path, ".manifest.tmp.json")
+    with open(manifest_tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
+    _gc_array_files(path, keep=set(shard_files))
+
+
+def _load_sharded_leaves(path: str, manifest: Dict) -> list:
+    shards = [np.load(os.path.join(path, f)) for f in manifest["shard_files"]]
+    leaves = []
+    for i in range(manifest["num_leaves"]):
+        ax = manifest["shard_axes"][i]
+        key = f"leaf_{i}"
+        if ax is None:
+            leaves.append(shards[0][key])
+        else:
+            leaves.append(
+                np.concatenate([sh[key] for sh in shards], axis=int(ax))
+            )
+    return leaves
 
 
 def _rebuild(spec: Any, leaves: list, pos: list) -> Any:
@@ -79,10 +249,20 @@ def _rebuild(spec: Any, leaves: list, pos: list) -> Any:
 
 
 def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
+    """Load either format, returning the fully assembled (global) tree.
+
+    Sharded checkpoints are reassembled by concatenating each leaf's shard
+    slices along its recorded axis — the caller (engine / jit) re-shards the
+    result onto whatever topology it is running, which may differ from the
+    one that saved.
+    """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    # pre-atomic-save checkpoints used a fixed "arrays.npz" name
-    data = np.load(os.path.join(path, manifest.get("arrays_file", "arrays.npz")))
-    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    if manifest.get("format") == "sharded":
+        leaves = _load_sharded_leaves(path, manifest)
+    else:
+        # pre-atomic-save checkpoints used a fixed "arrays.npz" name
+        data = np.load(os.path.join(path, manifest.get("arrays_file", "arrays.npz")))
+        leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
     tree = _rebuild(manifest["spec"], leaves, [0])
     return tree, manifest["step"], manifest.get("meta", {})

@@ -1,3 +1,15 @@
-from repro.data.synthetic import SyntheticLM, batches, eval_batches, sharded_batches
+from repro.data.synthetic import (
+    SyntheticLM,
+    batches,
+    eval_batches,
+    host_assembled_batches,
+    sharded_batches,
+)
 
-__all__ = ["SyntheticLM", "batches", "eval_batches", "sharded_batches"]
+__all__ = [
+    "SyntheticLM",
+    "batches",
+    "eval_batches",
+    "host_assembled_batches",
+    "sharded_batches",
+]

@@ -103,10 +103,50 @@ def batches(
 
 
 def sharded_batches(cfg, batch_size, seq_len, num_hosts, host_id, seed=0):
-    """Host-local shard of the global batch (data-parallel loading)."""
-    assert batch_size % num_hosts == 0
+    """Host-local shard of the global batch (data-parallel loading).
+
+    Every host walks the SAME seeded global stream and yields its contiguous
+    row slice, so concatenating the host shards reproduces
+    ``batches(cfg, batch_size, seq_len, seed)`` bit-for-bit — the invariant
+    a multi-host data axis needs for runs to be reproducible across
+    topologies. (The previous ``seed * num_hosts + host_id`` scheme gave
+    hosts unrelated streams that did not partition any global batch.)
+
+    Each host samples the full global batch and keeps 1/num_hosts of it: the
+    Markov sampler draws one rng stream per batch, so row i's tokens depend
+    on the draws for all rows — slicing after sampling is the only way to
+    shard bit-exactly. For the synthetic generator that redundancy is pure
+    CPU time; a real corpus loader would seek within one global shuffle
+    order instead.
+    """
+    assert batch_size % num_hosts == 0, (
+        f"global batch {batch_size} must divide over {num_hosts} hosts"
+    )
     local = batch_size // num_hosts
-    return batches(cfg, local, seq_len, seed=seed * num_hosts + host_id)
+    lo, hi = host_id * local, (host_id + 1) * local
+    for batch in batches(cfg, batch_size, seq_len, seed=seed):
+        yield {k: v[lo:hi] for k, v in batch.items()}
+
+
+def host_assembled_batches(cfg, batch_size, seq_len, num_hosts, seed=0):
+    """Global stream reassembled from per-host shard iterators.
+
+    Single-process emulation of multi-host loading: drives one
+    `sharded_batches` iterator per host and concatenates their slices, so
+    the driver exercises the exact sharded loading path while feeding the
+    engine the global batch a single process needs. Bit-identical to
+    ``batches(cfg, batch_size, seq_len, seed)``.
+    """
+    its = [
+        sharded_batches(cfg, batch_size, seq_len, num_hosts, h, seed=seed)
+        for h in range(num_hosts)
+    ]
+    while True:
+        shards = [next(it) for it in its]
+        yield {
+            k: jnp.concatenate([s[k] for s in shards], axis=0)
+            for k in shards[0]
+        }
 
 
 def eval_batches(cfg, batch_size, seq_len, n, seed=10_000):

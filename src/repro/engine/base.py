@@ -56,6 +56,21 @@ class PipelineEngine(abc.ABC):
         """Backend-specific pytree handed to `save_checkpoint`."""
         return (state.params, state.opt_state)
 
+    def save_checkpoint(
+        self, path: str, state: EngineState, step: int = 0,
+        meta: Optional[Dict] = None,
+    ) -> None:
+        """Write `state` under `path`; the engine picks the on-disk format.
+
+        The default is the gathered single-file format; `SpmdEngine`
+        overrides it with per-stage-shard files so the stage-sharded
+        params/FIFO/optimizer state never gather to one host. Loading is
+        format-agnostic (`repro.checkpoint.load_checkpoint`).
+        """
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(path, self.checkpoint_tree(state), step=step, meta=meta)
+
     def load_state(self, tree: Any) -> EngineState:
         """Rebuild an `EngineState` from `checkpoint_tree` output.
 

@@ -100,8 +100,6 @@ def run_loop(
     key: Any = None,
 ) -> Tuple[EngineState, List[float]]:
     """Run `cfg.steps` engine steps (from `start_step` when resuming)."""
-    from repro.checkpoint import save_checkpoint
-
     if state is None:
         state = engine.init_state(key=key)
     prefix, prefix_start = _read_metrics_prefix(cfg, start_step)
@@ -117,14 +115,16 @@ def run_loop(
                   f"  ({time.time() - t0:.1f}s)")
         wrote_ckpt = cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0
         if wrote_ckpt:
-            save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=t + 1)
+            # the engine owns the on-disk format (SpmdEngine writes one
+            # arrays file per stage shard instead of gathering to host)
+            engine.save_checkpoint(cfg.ckpt_dir, state, step=t + 1)
         # metrics are flushed at every checkpoint too, so the metrics file
         # never lags a checkpoint a later resume will restart from (a lagging
         # file would forfeit its pre-resume series at merge time)
         if cfg.out_path and (wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0):
             _write_metrics(cfg, prefix + losses, t + 1, prefix_start)
     if cfg.ckpt_dir:
-        save_checkpoint(cfg.ckpt_dir, engine.checkpoint_tree(state), step=cfg.steps)
+        engine.save_checkpoint(cfg.ckpt_dir, state, step=cfg.steps)
     if cfg.out_path:
         _write_metrics(cfg, prefix + losses, cfg.steps, prefix_start)
     return state, losses

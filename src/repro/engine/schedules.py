@@ -38,6 +38,12 @@ gradient yields exactly zero parameter/input gradients for idle ticks.
 Staleness composes the same for both schedules: the scanned loss is
 synchronous, and `stage_delayed_optimizer` imposes the per-stage delay on the
 resulting gradient (DESIGN.md §3, staleness semantics).
+
+``data_axis`` is whatever `Topology.schedule_data_axis` hands over: the bare
+``"data"`` axis on single-pod meshes or the ``("pod", "data")`` tuple on
+pod-replicated ones — every loss/gradient `pmean` spans the full tuple, so
+multi-pod runs are combined data + pipeline parallelism, not replicated
+training.
 """
 from __future__ import annotations
 

@@ -35,6 +35,7 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.engine.base import EngineState, PipelineEngine
 from repro.engine.schedules import make_fill_drain_loss, make_schedule_grad
+from repro.launch.topology import Topology
 from repro.pipeline.partition import FIRST_STAGE_SHARED, stage_context_for_stacked
 
 # Backwards-compatible alias; the canonical list lives with the partition
@@ -147,6 +148,14 @@ class SpmdEngine(PipelineEngine):
     snapshot the FIFO queues (``store_params``). ``use_kernels=True`` routes
     the basis-rotation matmuls and the fused Adam scale through the Pallas
     kernels (`repro.kernels.ops`), interpreted off-TPU.
+
+    ``topology`` places the engine on a `(pod, stage, data)` device layout
+    (`repro.launch.topology.Topology`): the mesh comes from
+    ``topology.make_mesh()`` and the gradient/loss data reduction spans
+    every data axis — ``("pod", "data")`` on multi-pod shapes. ``mesh`` is
+    still accepted for callers that pre-built one (its topology is recovered
+    via `Topology.from_mesh`); with neither, the engine uses every visible
+    device as a single-pod ``(stage, data)`` layout.
     """
 
     name = "spmd"
@@ -162,8 +171,8 @@ class SpmdEngine(PipelineEngine):
         async_grads: bool = True,
         schedule: str = "fill_drain",
         use_kernels: bool = False,
+        topology: Optional[Topology] = None,
     ):
-        from repro.launch.mesh import make_pipeline_mesh
         from repro.models.model import init_model
         from repro.optim.base import apply_updates, clip_by_global_norm
         from repro.optim.factory import build_optimizer
@@ -173,8 +182,22 @@ class SpmdEngine(PipelineEngine):
         self.schedule = schedule
         self.num_stages = K = num_stages
         self.num_microbatches = M = num_microbatches or num_stages
-        self.mesh = mesh if mesh is not None else make_pipeline_mesh(K)
-        self.grad_fn = make_pipeline_grad(cfg, self.mesh, K, M, schedule=schedule)
+        if topology is None:
+            topology = (
+                Topology.from_mesh(mesh) if mesh is not None
+                else Topology.from_device_count(K)
+            )
+        if topology.stages != K:
+            raise ValueError(
+                f"topology {topology.describe()} has {topology.stages} stages "
+                f"but the engine was asked for {K}"
+            )
+        self.topology = topology
+        self.mesh = mesh if mesh is not None else topology.make_mesh()
+        self.grad_fn = make_pipeline_grad(
+            cfg, self.mesh, K, M, schedule=schedule,
+            data_axis=topology.schedule_data_axis,
+        )
 
         # stage context from parameter SHAPES only — no device arrays yet
         shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
@@ -221,14 +244,22 @@ class SpmdEngine(PipelineEngine):
         """(B, S) host batch -> (M, B//M, S) microbatched pipeline input."""
         tokens = batch["tokens"]
         if tokens.ndim == 3:  # already microbatched
-            return batch
-        M = self.num_microbatches
-        B, S = tokens.shape
-        assert B % M == 0, f"batch {B} must divide into {M} microbatches"
-        return {
-            "tokens": tokens.reshape(M, B // M, S),
-            "labels": batch["labels"].reshape(M, B // M, S),
-        }
+            mb = tokens.shape[1]
+        else:
+            M = self.num_microbatches
+            B, S = tokens.shape
+            assert B % M == 0, f"batch {B} must divide into {M} microbatches"
+            mb = B // M
+            batch = {
+                "tokens": tokens.reshape(M, mb, S),
+                "labels": batch["labels"].reshape(M, mb, S),
+            }
+        shards = self.topology.data_shards
+        assert mb % shards == 0, (
+            f"microbatch size {mb} must divide over the {shards} data shards "
+            f"of topology {self.topology.describe()}"
+        )
+        return batch
 
     def step(
         self, state: EngineState, batch: Dict, t: int
@@ -247,3 +278,23 @@ class SpmdEngine(PipelineEngine):
         """Unstacked (per-layer) parameter tree, e.g. for evaluation."""
         stacked, shared = state.params
         return unstack_stage_params(stacked, shared, self.cfg)
+
+    def save_checkpoint(
+        self, path: str, state: EngineState, step: int = 0,
+        meta: Optional[Dict] = None,
+    ) -> None:
+        """Per-stage-shard save: one arrays file per pipeline stage.
+
+        Each leaf's shard axis is read from its live `NamedSharding` (the
+        stacked params/moments on axis 0, the delay-FIFO queues on their
+        stage axis); leaves the runtime replicates — shared params, scalar
+        counters, anything saved before the first compiled step — go to
+        shard 0. No gather-to-host of the stage-sharded state.
+        """
+        from repro.checkpoint import save_sharded_checkpoint
+
+        save_sharded_checkpoint(
+            path, self.checkpoint_tree(state), num_shards=self.num_stages,
+            step=step,
+            meta={"topology": self.topology.describe(), **(meta or {})},
+        )

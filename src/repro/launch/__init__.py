@@ -1,3 +1,9 @@
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh, mesh_shape_dict
+from repro.launch.topology import Topology
 
-__all__ = ["make_production_mesh", "make_smoke_mesh", "mesh_shape_dict"]
+__all__ = [
+    "Topology",
+    "make_production_mesh",
+    "make_smoke_mesh",
+    "mesh_shape_dict",
+]

@@ -23,11 +23,11 @@ import time  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import OptimizerConfig, get_config  # noqa: E402
-from repro.launch.mesh import make_mesh_compat, use_mesh  # noqa: E402
+from repro.launch.mesh import use_mesh  # noqa: E402
 from repro.launch.roofline import roofline_from_compiled  # noqa: E402
+from repro.launch.topology import Topology  # noqa: E402
 from repro.models.model import init_model  # noqa: E402
 from repro.optim.base import apply_updates  # noqa: E402
 from repro.optim.factory import build_optimizer  # noqa: E402
@@ -57,14 +57,14 @@ def main():
     cfg = get_config(args.arch).replace(scan_layers=False, dtype="bfloat16")
     assert cfg.num_layers % K == 0
 
-    if args.multi_pod:
-        mesh = make_mesh_compat((2, K, 16), ("pod", "stage", "data"))
-        data_axes = ("pod", "data")
-        mb = 64  # per-microbatch global batch
-    else:
-        mesh = make_mesh_compat((K, 16), ("stage", "data"))
-        data_axes = ("data",)
-        mb = 32
+    # the production shapes come from the shared Topology abstraction — the
+    # same object SpmdEngine trains on (this dry-run only compiles)
+    topo = (
+        Topology.multi_pod(pods=2, stages=K, data=16) if args.multi_pod
+        else Topology.single_pod(stages=K, data=16)
+    )
+    mesh = topo.make_mesh()
+    mb = 32 * topo.pods  # per-microbatch global batch scales with the pods
 
     # stage-stacked parameter shapes (leading dim = stage, sharded on `stage`)
     params_shapes = jax.eval_shape(
@@ -75,21 +75,22 @@ def main():
     )
     stage_sh = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(
-            a.shape, a.dtype, sharding=NamedSharding(
-                mesh, P("stage", *([None] * (len(a.shape) - 1))))
+            a.shape, a.dtype,
+            sharding=NamedSharding(mesh, topo.stage_spec(len(a.shape)))
         ),
         stacked_s,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
     )
     shared_sh = jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
-                                       sharding=NamedSharding(mesh, P())),
+        lambda a: jax.ShapeDtypeStruct(
+            a.shape, a.dtype,
+            sharding=NamedSharding(mesh, topo.replicated_spec())),
         shared_s,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
     )
 
     S = 512
-    tok_sharding = NamedSharding(mesh, P(None, data_axes, None))
+    tok_sharding = NamedSharding(mesh, topo.batch_spec())
     batch = {
         "tokens": jax.ShapeDtypeStruct((M, mb, S), jnp.int32, sharding=tok_sharding),
         "labels": jax.ShapeDtypeStruct((M, mb, S), jnp.int32, sharding=tok_sharding),
@@ -97,7 +98,7 @@ def main():
 
     grad_fn = make_pipeline_grad(
         cfg, mesh, K, M, schedule=args.schedule,
-        data_axis=data_axes if args.multi_pod else "data",
+        data_axis=topo.schedule_data_axis,
     )
 
     # async step: pipeline grads + per-stage delayed basis-rotation update
@@ -144,7 +145,7 @@ def main():
     row = {
         "kind": "pipeline_dryrun",
         "arch": args.arch,
-        "mesh": "2x16x16" if args.multi_pod else "16x16",
+        "mesh": topo.describe(),
         "stages": K,
         "microbatches": M,
         "schedule": args.schedule,

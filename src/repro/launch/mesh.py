@@ -59,21 +59,5 @@ def make_smoke_mesh() -> Mesh:
     return make_mesh_compat((1, 1), ("data", "model"))
 
 
-def make_pipeline_mesh(num_stages: int, data_parallel: int = 0) -> Mesh:
-    """(stage, data) mesh for the SPMD pipeline runtime.
-
-    ``data_parallel=0`` uses every visible device: data = n_devices // stages.
-    On CPU, force devices first (``--xla_force_host_platform_device_count``).
-    """
-    n = len(jax.devices())
-    if data_parallel <= 0:
-        if n % num_stages != 0:
-            raise ValueError(
-                f"{n} devices not divisible by {num_stages} pipeline stages"
-            )
-        data_parallel = n // num_stages
-    return make_mesh_compat((num_stages, data_parallel), ("stage", "data"))
-
-
 def mesh_shape_dict(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))

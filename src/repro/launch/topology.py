@@ -1,0 +1,162 @@
+"""First-class description of the (pod, stage, data) device topology.
+
+Every entry point used to hand-roll its own mesh: `SpmdEngine` built a
+single-host (stage, data) mesh, `dryrun_pipeline.py` a fake 512-chip
+(pod, stage, data) mesh, and the benchmarks a third variant. `Topology` is
+the single owner of that decision: it names the axes, builds the mesh
+(through the version-compat shims in `repro.launch.mesh`), derives the
+PartitionSpecs for stage-stacked parameters and microbatched token streams,
+and tells the data pipeline how many host shards the global batch splits
+into. Everything downstream — the tick schedules' gradient reductions, the
+engine's batch validation, the sharded checkpointer's shard count — reads
+the same object instead of re-deriving axis names.
+
+Axis layout (pod-major, matching the production dry-run):
+
+    pods == 1 :  (stage, data)            e.g. 16 x 16  = one 256-chip pod
+    pods >= 2 :  (pod, stage, data)       e.g. 2 x 16 x 16 = two pods
+
+The pod axis is OMITTED from the mesh when ``pods == 1`` so single-pod
+programs keep the exact mesh shape (and therefore compiled layout) they had
+before the abstraction existed; the schedules receive the data-reduction
+axes as a tuple whenever the pod axis is real, which makes gradient
+all-reduces span ``("pod", "data")`` — combined data parallelism across
+pods, the regime AsyncMesh calls out as the interesting one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+STAGE_AXIS = "stage"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+@dataclass(frozen=True)
+class Topology:
+    """(pod, stage, data) shape of one SPMD pipeline deployment."""
+
+    stages: int
+    data: int = 1
+    pods: int = 1
+
+    def __post_init__(self):
+        if self.stages < 1 or self.data < 1 or self.pods < 1:
+            raise ValueError(f"all topology axes must be >= 1, got {self}")
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.pods == 1:
+            return (self.stages, self.data)
+        return (self.pods, self.stages, self.data)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        if self.pods == 1:
+            return (STAGE_AXIS, DATA_AXIS)
+        return (POD_AXIS, STAGE_AXIS, DATA_AXIS)
+
+    @property
+    def num_devices(self) -> int:
+        return self.pods * self.stages * self.data
+
+    @property
+    def data_shards(self) -> int:
+        """Ways the global batch is split: the full (pod, data) extent."""
+        return self.pods * self.data
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Mesh axes that carry data parallelism (gradient all-reduce group)."""
+        if self.pods == 1:
+            return (DATA_AXIS,)
+        return (POD_AXIS, DATA_AXIS)
+
+    @property
+    def schedule_data_axis(self) -> Union[str, Tuple[str, ...]]:
+        """``data_axis`` argument for the tick schedules: the bare axis name
+        single-pod (the historical path), the ("pod", "data") tuple multi-pod."""
+        if self.pods == 1:
+            return DATA_AXIS
+        return self.data_axes
+
+    def describe(self) -> str:
+        return "x".join(str(s) for s in self.shape)
+
+    # -- mesh + specs --------------------------------------------------------
+
+    def make_mesh(self) -> Mesh:
+        from repro.launch.mesh import make_mesh_compat
+
+        return make_mesh_compat(self.shape, self.axis_names)
+
+    def stage_spec(self, ndim: int) -> P:
+        """Stage-stacked leaf of rank ``ndim``: leading axis over `stage`."""
+        return P(STAGE_AXIS, *([None] * (ndim - 1)))
+
+    def batch_spec(self) -> P:
+        """(M, mb, S) microbatched tokens: mb sharded over every data axis."""
+        return P(None, self.data_axes, None)
+
+    def replicated_spec(self) -> P:
+        return P()
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def single_host(cls, stages: int, data: int = 1) -> "Topology":
+        """Test/smoke shape: K forced host devices, optional data axis."""
+        return cls(stages=stages, data=data)
+
+    @classmethod
+    def single_pod(cls, stages: int = 16, data: int = 16) -> "Topology":
+        """The production 16x16 pod (256 chips)."""
+        return cls(stages=stages, data=data)
+
+    @classmethod
+    def multi_pod(cls, pods: int = 2, stages: int = 16, data: int = 16) -> "Topology":
+        """Pod-replicated production shape, e.g. 2x16x16 = 512 chips."""
+        return cls(stages=stages, data=data, pods=pods)
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "Topology":
+        """Recover the topology from a mesh built with the canonical axes."""
+        dims = dict(zip(mesh.axis_names, mesh.devices.shape))
+        unknown = set(dims) - {POD_AXIS, STAGE_AXIS, DATA_AXIS}
+        if unknown or STAGE_AXIS not in dims:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} are not a pipeline topology "
+                f"(expected a subset of (pod, stage, data) containing stage)"
+            )
+        return cls(stages=dims[STAGE_AXIS], data=dims.get(DATA_AXIS, 1),
+                   pods=dims.get(POD_AXIS, 1))
+
+    @classmethod
+    def from_device_count(
+        cls, stages: int, pods: int = 1, data: int = 0,
+        device_count: Optional[int] = None,
+    ) -> "Topology":
+        """Fill in the data axis from the visible device count.
+
+        ``data == 0`` means "use every device": data = n // (pods * stages).
+        On CPU, force host devices first (``--xla_force_host_platform_
+        device_count``).
+        """
+        if device_count is None:
+            import jax
+
+            device_count = len(jax.devices())
+        if data <= 0:
+            if device_count % (pods * stages) != 0:
+                raise ValueError(
+                    f"{device_count} devices not divisible by pods*stages = "
+                    f"{pods}*{stages}"
+                )
+            data = device_count // (pods * stages)
+        return cls(stages=stages, data=data, pods=pods)

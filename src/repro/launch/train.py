@@ -10,10 +10,14 @@ Two backends behind the same loop (`repro.engine`):
     schedule (``--schedule fill_drain`` or ``1f1b``; 1F1B bounds the live
     activation stash at O(stages) instead of O(microbatches)), and the
     per-stage delay FIFO applying PipeDream weight-stashing staleness to the
-    stage-stacked parameters. On a CPU-only host the driver
-    forces `--stages` host devices automatically; on accelerator machines
-    whose device count doesn't divide `--stages`, re-run with
-    ``JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=K``.
+    stage-stacked parameters. ``--pods`` / ``--data-par`` place the run on a
+    `(pod, stage, data)` `Topology` (gradients all-reduce over
+    ``("pod", "data")``, checkpoints save one arrays file per stage shard,
+    and multi-pod runs load data host-sharded via
+    ``data.synthetic.sharded_batches``). On a CPU-only host the driver
+    forces ``pods*stages*data`` host devices automatically; on accelerator
+    machines with a different device count, re-run with
+    ``JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
     PYTHONPATH=src python -m repro.launch.train \\
         --arch paper_95m --stages 8 --optimizer basis_rotation \\
@@ -35,6 +39,12 @@ def parse_args(argv=None):
     ap.add_argument("--smoke", action="store_true", help="use the reduced config")
     ap.add_argument("--backend", default="sim", choices=["sim", "spmd"])
     ap.add_argument("--stages", type=int, default=8)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="spmd backend: pod-replicated (pod, stage, data) "
+                         "topology; gradients all-reduce over (pod, data)")
+    ap.add_argument("--data-par", type=int, default=0,
+                    help="spmd backend: data-parallel axis size per pod "
+                         "(default 0 = use every visible device)")
     ap.add_argument("--microbatches", type=int, default=0,
                     help="spmd backend: pipeline microbatches (default: stages)")
     # literal list (not engine.schedules.SCHEDULES): importing repro.engine
@@ -76,24 +86,30 @@ def main(argv=None):
             "--schedule picks the SPMD tick schedule; the sim backend imposes "
             "delays directly and has no schedule (use --backend spmd)"
         )
+    if args.backend != "spmd" and (args.pods != 1 or args.data_par > 1):
+        raise SystemExit(
+            "--pods / --data-par describe the spmd device topology; the sim "
+            "backend is a single-program simulation (use --backend spmd)"
+        )
     if args.backend == "spmd":
         if args.weight_prediction or args.no_stash:
             raise SystemExit(
                 "--weight-prediction / --no-stash are sim-backend modes; "
                 "the spmd backend imposes weight-stashing staleness physically"
             )
-        # the spmd backend needs `stages` devices; on CPU, force host devices
-        # BEFORE any jax device-state initialisation
+        # the spmd backend needs pods*stages*data devices; on CPU, force host
+        # devices BEFORE any jax device-state initialisation
+        n_dev = args.pods * args.stages * max(args.data_par, 1)
         flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
-                flags + f" --xla_force_host_platform_device_count={args.stages}"
+                flags + f" --xla_force_host_platform_device_count={n_dev}"
             ).strip()
 
     import jax
 
     from repro.configs import OptimizerConfig, get_config
-    from repro.data import batches
+    from repro.data import batches, host_assembled_batches
     from repro.engine import (
         LoopConfig,
         SimEngine,
@@ -101,6 +117,7 @@ def main(argv=None):
         resume_if_present,
         run_loop,
     )
+    from repro.launch.topology import Topology
     from repro.models import init_model, param_count
     from repro.optim.base import make_schedule
     from repro.optim.factory import build_optimizer
@@ -125,23 +142,43 @@ def main(argv=None):
                 f"--stages {args.stages} must divide {cfg.num_layers} layers"
             )
 
+    topology = None
     if args.backend == "spmd":
         # the flag above only helps the CPU backend; verify the topology that
         # actually came up and fail with the remedy rather than a mesh error
         n = len(jax.devices())
-        if n % args.stages != 0:
+        try:
+            topology = Topology.from_device_count(
+                args.stages, pods=args.pods, data=args.data_par
+            )
+        except ValueError:
+            topology = None
+        if topology is None or topology.num_devices != n:
             # the forced-host-device flag only affects the CPU platform (and
             # only if it wasn't already set with a different count)
+            want = args.pods * args.stages * max(args.data_par, 1)
             raise SystemExit(
-                f"spmd backend: {n} devices not divisible by --stages "
-                f"{args.stages}; re-run with JAX_PLATFORMS=cpu XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={args.stages}"
+                f"spmd backend: {n} devices do not form a "
+                f"(pods={args.pods}, stages={args.stages}, "
+                f"data={args.data_par}) topology; re-run with "
+                f"JAX_PLATFORMS=cpu XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={want}"
+            )
+        M = args.microbatches or args.stages
+        shards = topology.data_shards
+        if args.batch % M or (args.batch // M) % shards:
+            raise SystemExit(
+                f"--batch {args.batch} must split into {M} microbatches of a "
+                f"size divisible by the {shards} data shard(s) of topology "
+                f"{topology.describe()}"
             )
 
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
+    topo_str = topology.describe() if topology is not None else None
     print(f"arch={cfg.name} params={param_count(params):,} stages={args.stages} "
-          f"optimizer={args.optimizer} backend={args.backend}")
+          f"optimizer={args.optimizer} backend={args.backend}"
+          + (f" topology={topo_str}" if topo_str else ""))
 
     ocfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
@@ -155,6 +192,7 @@ def main(argv=None):
             cfg, ocfg, num_stages=args.stages,
             num_microbatches=args.microbatches, async_grads=not args.sync,
             schedule=args.schedule, use_kernels=args.use_kernels,
+            topology=topology,
         )
     else:
         # --sync drops the simulated delay FIFO (but keeps stage-aware
@@ -173,9 +211,18 @@ def main(argv=None):
         )
 
     state = engine.init_state(params=params)
-    data = batches(cfg, args.batch, args.seq, seed=args.seed)
+    if topology is not None and topology.pods > 1:
+        # host-sharded loading, one emulated host per pod: each pod walks its
+        # slice of the same seeded global stream (sharded_batches partitions
+        # batches() bit-for-bit, so the topology never changes the data)
+        data = host_assembled_batches(
+            cfg, args.batch, args.seq, num_hosts=topology.pods, seed=args.seed
+        )
+    else:
+        data = batches(cfg, args.batch, args.seq, seed=args.seed)
     # resume_if_present fast-forwards `data` past the consumed batches, so a
-    # resumed run continues the exact uninterrupted stream
+    # resumed run continues the exact uninterrupted stream (the assembled
+    # sharded iterator advances every host shard in lock-step)
     state, start_step = resume_if_present(engine, state, args.ckpt_dir, data)
     if start_step:
         print(f"resumed from {args.ckpt_dir} at step {start_step}")
@@ -186,7 +233,8 @@ def main(argv=None):
         out_path=args.out,
         out_meta={"arch": cfg.name, "optimizer": args.optimizer,
                   "stages": args.stages, "backend": args.backend,
-                  "schedule": args.schedule if args.backend == "spmd" else None},
+                  "schedule": args.schedule if args.backend == "spmd" else None,
+                  "topology": topo_str},
     )
     _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
     if losses:

@@ -7,7 +7,12 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    load_checkpoint,
+    save_checkpoint,
+    save_sharded_checkpoint,
+)
+from repro.launch.topology import Topology
 from repro.configs.base import (
     AttentionConfig,
     BlockSpec,
@@ -92,6 +97,45 @@ def test_sampler_off_edge_draw_unchanged():
         np.testing.assert_array_equal(new_draw[valid], old[valid])
         out[:, t + 1] = new_draw
     np.testing.assert_array_equal(toks, out)
+
+
+def test_sharded_batches_partition_global_stream():
+    """Regression: host shards must be slices of the SAME seeded global
+    stream — concatenating them reproduces `batches(...)` bit-for-bit at
+    every step (the old ``seed * num_hosts + host_id`` scheme gave hosts
+    unrelated streams that partitioned nothing)."""
+    from repro.data import host_assembled_batches, sharded_batches
+
+    cfg = ModelConfig(vocab_size=64)
+    ref = batches(cfg, 8, 16, seed=3)
+    its = [sharded_batches(cfg, 8, 16, 4, h, seed=3) for h in range(4)]
+    asm = host_assembled_batches(cfg, 8, 16, 4, seed=3)
+    for _ in range(3):
+        want = next(ref)
+        shards = [next(it) for it in its]
+        for key in ("tokens", "labels"):
+            assert all(s[key].shape == (2, 16) for s in shards)
+            cat = np.concatenate([np.asarray(s[key]) for s in shards], axis=0)
+            np.testing.assert_array_equal(cat, np.asarray(want[key]))
+        got = next(asm)
+        for key in ("tokens", "labels"):
+            np.testing.assert_array_equal(
+                np.asarray(got[key]), np.asarray(want[key])
+            )
+
+
+def test_sharded_batches_single_host_stream_unchanged():
+    """num_hosts=1 must reproduce the historical `batches(seed)` stream, so
+    existing fixed-seed runs are untouched by the partition fix."""
+    from repro.data import sharded_batches
+
+    cfg = ModelConfig(vocab_size=64)
+    a = sharded_batches(cfg, 8, 16, 1, 0, seed=5)
+    b = batches(cfg, 8, 16, seed=5)
+    for _ in range(2):
+        x, y = next(a), next(b)
+        np.testing.assert_array_equal(np.asarray(x["tokens"]), np.asarray(y["tokens"]))
+        np.testing.assert_array_equal(np.asarray(x["labels"]), np.asarray(y["labels"]))
 
 
 def test_data_modalities():
@@ -186,6 +230,168 @@ def test_checkpoint_interrupted_save_keeps_previous(tmp_path, monkeypatch):
     tree, step, _ = load_checkpoint(path)
     assert step == 1
     np.testing.assert_array_equal(np.asarray(tree["w"]), np.arange(4.0))
+
+
+def test_topology_shapes_and_axes():
+    t = Topology.single_host(4)
+    assert t.shape == (4, 1) and t.axis_names == ("stage", "data")
+    assert t.schedule_data_axis == "data" and t.data_shards == 1
+    p = Topology.single_pod()
+    assert p.shape == (16, 16) and p.num_devices == 256
+    m = Topology.multi_pod()
+    assert m.shape == (2, 16, 16) and m.axis_names == ("pod", "stage", "data")
+    assert m.schedule_data_axis == ("pod", "data")
+    assert m.data_shards == 32 and m.num_devices == 512
+    assert m.describe() == "2x16x16"
+    assert m.stage_spec(3) == P("stage", None, None)
+    assert m.batch_spec() == P(None, ("pod", "data"), None)
+    assert Topology.from_device_count(4, pods=2, data=0, device_count=16) == \
+        Topology(stages=4, data=2, pods=2)
+    with pytest.raises(ValueError):
+        Topology.from_device_count(3, device_count=16)
+    with pytest.raises(ValueError):
+        Topology(stages=0)
+
+
+def test_topology_mesh_roundtrip():
+    # single device: the smoke (stage=1, data=1) mesh carries the axis names
+    t = Topology.single_host(1)
+    mesh = t.make_mesh()
+    assert Topology.from_mesh(mesh) == t
+
+
+def test_sharded_checkpoint_roundtrip_equals_gathered(tmp_path):
+    """One arrays file per stage shard must reassemble to exactly the tree a
+    gathered save stores — values, dtypes and structure."""
+    tree = (
+        {"stacked": jnp.arange(24.0).reshape(4, 3, 2),
+         "fifo": jnp.arange(24.0).reshape(3, 4, 2) * 2.0},
+        {"shared": jnp.ones((5,), jnp.float32), "count": jnp.int32(7)},
+    )
+    # tree_flatten order: fifo, stacked, count, shared
+    axes = [1, 0, None, None]
+    sharded = str(tmp_path / "sharded")
+    gathered = str(tmp_path / "gathered")
+    save_sharded_checkpoint(sharded, tree, num_shards=4, step=9,
+                            shard_axes=axes, meta={"topology": "4x1"})
+    save_checkpoint(gathered, tree, step=9)
+    names = sorted(os.listdir(sharded))
+    assert sum(n.endswith(".npz") for n in names) == 4  # one file per shard
+    a, step_a, meta_a = load_checkpoint(sharded)
+    b, step_b, _ = load_checkpoint(gathered)
+    assert step_a == step_b == 9 and meta_a["topology"] == "4x1"
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+
+
+def test_sharded_checkpoint_rejects_bad_axis(tmp_path):
+    tree = {"w": jnp.zeros((3, 2))}
+    with pytest.raises(ValueError, match="not divisible"):
+        save_sharded_checkpoint(str(tmp_path), tree, num_shards=2,
+                                shard_axes=[0])
+
+
+def test_sharded_checkpoint_same_step_resave_never_overwrites(tmp_path, monkeypatch):
+    """Re-saving the SAME step (re-run into an old dir, the loop's final-step
+    double save) must not replace committed shard files in place: a crash
+    mid-save would otherwise leave the old manifest naming a mixed
+    old/new shard set. Fresh generation-suffixed names keep the previous
+    checkpoint fully consistent until the new manifest commits."""
+    path = str(tmp_path / "ckpt")
+    axes = [0]
+    save_sharded_checkpoint(path, {"w": jnp.zeros((2, 2))}, num_shards=2,
+                            step=5, shard_axes=axes, meta={"run": "old"})
+    old_files = {n for n in os.listdir(path) if n.endswith(".npz")}
+
+    # crash after the first shard file of the re-save is committed
+    real_savez = np.savez
+    calls = {"n": 0}
+
+    def savez_boom(file, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("simulated crash during shard write")
+        return real_savez(file, **kw)
+
+    monkeypatch.setattr(np, "savez", savez_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_sharded_checkpoint(path, {"w": jnp.ones((2, 2))}, num_shards=2,
+                                step=5, shard_axes=axes, meta={"run": "new"})
+    monkeypatch.undo()
+
+    # every old shard file is untouched and the old tree loads exactly
+    assert old_files <= {n for n in os.listdir(path)}
+    tree, step, meta = load_checkpoint(path)
+    assert step == 5 and meta["run"] == "old"
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.zeros((2, 2)))
+
+    # a successful re-save commits under fresh names and GCs the old set
+    save_sharded_checkpoint(path, {"w": jnp.ones((2, 2))}, num_shards=2,
+                            step=5, shard_axes=axes, meta={"run": "new"})
+    tree, _, meta = load_checkpoint(path)
+    assert meta["run"] == "new"
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.ones((2, 2)))
+    assert not (old_files & {n for n in os.listdir(path)})
+
+
+def test_sharded_checkpoint_interrupted_save_keeps_previous(tmp_path, monkeypatch):
+    """The manifest swap is the single commit point for the whole shard file
+    set: a crash while writing any shard file — or before the manifest
+    lands — must leave the previous sharded checkpoint loadable."""
+    path = str(tmp_path / "ckpt")
+    tree1 = {"w": jnp.arange(8.0).reshape(4, 2), "b": jnp.ones((3,))}
+    axes = [None, 0]  # flatten order: b, w
+    save_sharded_checkpoint(path, tree1, num_shards=4, step=1, shard_axes=axes,
+                            meta={"note": "good"})
+
+    # crash while writing the third shard file
+    real_savez = np.savez
+    calls = {"n": 0}
+
+    def savez_boom(file, **kw):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            with open(file, "wb") as f:
+                f.write(b"\x00partial-garbage")
+            raise RuntimeError("simulated crash during shard write")
+        return real_savez(file, **kw)
+
+    monkeypatch.setattr(np, "savez", savez_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_sharded_checkpoint(path, {"w": jnp.zeros((4, 2)), "b": jnp.zeros((3,))},
+                                num_shards=4, step=2, shard_axes=axes)
+    monkeypatch.undo()
+
+    tree, step, meta = load_checkpoint(path)
+    assert step == 1 and meta["note"] == "good"
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.arange(8.0).reshape(4, 2))
+
+    # crash before the manifest commit: all new shard files on disk, but the
+    # old manifest still names the old (complete) set
+    real_replace = os.replace
+
+    def replace_boom(src, dst):
+        if dst.endswith("manifest.json"):
+            raise RuntimeError("simulated crash before manifest commit")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", replace_boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_sharded_checkpoint(path, {"w": jnp.zeros((4, 2)), "b": jnp.zeros((3,))},
+                                num_shards=4, step=3, shard_axes=axes)
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    tree, step, _ = load_checkpoint(path)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["b"]), np.ones((3,)))
+
+    # a successful save GCs the stranded step-2/3 shard files
+    save_sharded_checkpoint(path, tree1, num_shards=4, step=4, shard_axes=axes)
+    left = sorted(n for n in os.listdir(path) if n.endswith(".npz"))
+    assert left == [f"arrays-00000004-shard{s:05d}-of-00004.npz" for s in range(4)]
 
 
 def test_param_pspec_rules():
