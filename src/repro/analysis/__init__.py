@@ -1,0 +1,84 @@
+"""Static-analysis subsystem: jaxpr, HLO, and AST invariant checks.
+
+Three layers (DESIGN.md §8), all pure inspection — nothing here executes a
+training step:
+
+* `repro.analysis.jaxpr` — traversal API + named checks on traced programs
+  (O(1)-in-M scan bodies, cond-gated vocab matmuls, dtype policy, the
+  2K-1 stash bound);
+* `repro.analysis.hlo` — the collective parser (shared with
+  `launch/roofline.py`) + replica-group checks against `Topology`;
+* `repro.analysis.lint` — AST rules over ``src/repro`` source.
+
+`repro.analysis.runner` drives all of it over the engine matrix:
+``python -m repro.analysis --matrix smoke``.
+"""
+from repro.analysis.jaxpr import (
+    BF16_COMPUTE_POLICY,
+    CheckResult,
+    DtypePolicy,
+    F32_POLICY,
+    as_jaxpr,
+    check_dtype_policy,
+    check_no_dot_outside_cond,
+    check_scan_body_constant_in_microbatches,
+    check_stash_bound,
+    float_dtypes,
+    iter_avals,
+    iter_eqns,
+    leading_dims_of,
+    max_float_bytes,
+    n_eqns,
+    sub_jaxprs,
+    vocab_dot_counts,
+)
+from repro.analysis.hlo import (
+    COLLECTIVE_OPS,
+    CollectiveInstr,
+    CollectiveStats,
+    check_collective_axes,
+    check_data_reduction,
+    collective_stats,
+    declared_groupings,
+    parse_collectives,
+)
+from repro.analysis.lint import (
+    LintFinding,
+    check_repo_lint,
+    lint_file,
+    lint_source,
+    lint_tree,
+)
+
+__all__ = [
+    "BF16_COMPUTE_POLICY",
+    "CheckResult",
+    "DtypePolicy",
+    "F32_POLICY",
+    "as_jaxpr",
+    "check_dtype_policy",
+    "check_no_dot_outside_cond",
+    "check_scan_body_constant_in_microbatches",
+    "check_stash_bound",
+    "float_dtypes",
+    "iter_avals",
+    "iter_eqns",
+    "leading_dims_of",
+    "max_float_bytes",
+    "n_eqns",
+    "sub_jaxprs",
+    "vocab_dot_counts",
+    "COLLECTIVE_OPS",
+    "CollectiveInstr",
+    "CollectiveStats",
+    "check_collective_axes",
+    "check_data_reduction",
+    "collective_stats",
+    "declared_groupings",
+    "parse_collectives",
+    "LintFinding",
+    "check_repo_lint",
+    "lint_file",
+    "lint_source",
+    "lint_tree",
+]

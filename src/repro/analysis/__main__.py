@@ -1,0 +1,21 @@
+"""``python -m repro.analysis``: run the static invariant matrix.
+
+Forces enough host devices for the largest topology in the matrix (the
+2-pod cell needs pods*stages*data) BEFORE jax initializes a backend, same
+discipline as the dry-run entry points.
+"""
+import os
+import sys
+
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    from repro.analysis.runner import required_devices
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={required_devices()}"
+    ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.analysis.runner import main  # noqa: E402
+
+sys.exit(main())

@@ -1,0 +1,310 @@
+"""HLO collective auditor: parse optimized modules, verify collective axes.
+
+Layer 2 of the static-analysis subsystem (DESIGN.md §8). The instruction
+scanner here is THE collective parser — `launch/roofline.py` re-exports it
+for its bandwidth accounting, and the checks below reuse the same parse to
+enforce *which* collective runs over *which* mesh axis:
+
+* every `all-reduce` / `all-gather` / `reduce-scatter` / `all-to-all` must
+  run over replica groups that exactly match one axis subset declared by
+  `Topology` (`Topology.replica_groups`) — a group that mixes device
+  coordinates diagonally is a mis-sharded reduction no loss curve will
+  reliably surface;
+* every `collective-permute` must move along the stage axis only (the
+  pipeline's fwd/bwd neighbour shifts) — pairs crossing the data or pod
+  axis mean activations are leaking between replicas;
+* the combined data-axes gradient all-reduce — spanning ``("pod", "data")``
+  on multi-pod shapes — must be present iff the topology has more than one
+  data shard (pod+data pmean present iff pods > 1 in the data=1 matrix).
+
+Replica groups are parsed in both textual forms XLA emits: the explicit
+``replica_groups={{0,1},{2,3}}`` and the iota form
+``replica_groups=[2,2]<=[4]`` / ``[G,S]<=[d0,..]T(p0,..)``. Group members
+are flattened positions in the mesh's device assignment (row-major over the
+(pod, stage, data) shape), which is exactly what `Topology.replica_groups`
+returns.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.analysis.jaxpr import CheckResult
+
+# ---------------------------------------------------------------------------
+# Instruction scanner (shared with launch/roofline.py)
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  f32[128,1024]{1,0}   or  bf16[2,8]   or tuple elements
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# one HLO instruction: "%name = <output type(s)> <op>(...)" — each collective
+# is billed by its OUTPUT type(s), which works uniformly for single and
+# tuple-combined collectives (optimized HLO prints operands as bare
+# instruction references without types). For all-reduce / all-to-all /
+# collective-permute output size == operand size; for all-gather it is the
+# gathered (larger) size and for reduce-scatter the scattered (smaller) one —
+# both are natural per-device traffic proxies.
+INSTR_RE = re.compile(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+?)(-start|-done)?\(")
+
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\{\})")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+(?:,\d+)*)\]<=\[(\d+(?:,\d+)*)\]"
+    r"(?:T\((\d+(?:,\d+)*)\))?"
+)
+_PAIRS_RE = re.compile(r"source_target_pairs=(\{\{.*?\}\})")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+@dataclass
+class CollectiveInstr:
+    """One parsed collective instruction of an optimized HLO module."""
+
+    op: str  # base opcode, e.g. "all-reduce" (async -start folded in)
+    out_bytes: int
+    replica_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    source_target_pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+    line: str = ""
+
+
+def _parse_brace_groups(text: str) -> Tuple[Tuple[int, ...], ...]:
+    """``{{0,1},{2,3}}`` -> ((0, 1), (2, 3)); ``{}`` -> ()."""
+    if text == "{}":
+        return ()
+    return tuple(
+        tuple(int(x) for x in grp.replace(" ", "").split(",") if x)
+        for grp in re.findall(r"\{([\d,\s]*)\}", text[1:-1])
+    )
+
+
+def _parse_iota_groups(
+    group_dims: str, reshape_dims: str, perm: Optional[str]
+) -> Tuple[Tuple[int, ...], ...]:
+    """Expand the iota replica-group form to explicit groups.
+
+    ``[G,S]<=[d0,d1,..]T(p0,p1,..)``: take ``arange(prod(d))``, reshape to
+    the d-dims, transpose by the permutation (identity when absent), then
+    reshape to (num_groups, group_size) row-major.
+    """
+    import numpy as np
+
+    gdims = [int(x) for x in group_dims.split(",")]
+    rdims = [int(x) for x in reshape_dims.split(",")]
+    ids = np.arange(int(np.prod(rdims))).reshape(rdims)
+    if perm:
+        ids = ids.transpose([int(x) for x in perm.split(",")])
+    ids = ids.reshape(-1)
+    # trailing group dims are the group size; leading are the group count
+    size = gdims[-1]
+    return tuple(
+        tuple(int(x) for x in row) for row in ids.reshape(-1, size)
+    )
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveInstr]:
+    """Every collective instruction in (optimized) HLO text, with replica
+    groups / source-target pairs decoded to flattened device positions."""
+    out: List[CollectiveInstr] = []
+    for line in hlo_text.splitlines():
+        m = INSTR_RE.search(line)
+        if not m:
+            continue
+        out_types, base, suffix = m.group(1), m.group(2), m.group(3)
+        if base not in COLLECTIVE_OPS:
+            continue
+        if suffix == "-done":
+            continue  # counted at -start
+        nbytes = sum(
+            shape_bytes(d, dims) for d, dims in SHAPE_RE.findall(out_types)
+        )
+        groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            groups = _parse_brace_groups(gm.group(1))
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                groups = _parse_iota_groups(*im.groups())
+        pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+        pm = _PAIRS_RE.search(line)
+        if pm:
+            pairs = tuple(
+                (int(a), int(b))
+                for a, b in re.findall(r"\{(\d+),\s*(\d+)\}", pm.group(1))
+            )
+        out.append(
+            CollectiveInstr(
+                op=base, out_bytes=nbytes, replica_groups=groups,
+                source_target_pairs=pairs, line=line.strip(),
+            )
+        )
+    return out
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-type bytes of every collective op in (optimized) HLO text."""
+    stats = CollectiveStats()
+    for ins in parse_collectives(hlo_text):
+        stats.bytes_by_op[ins.op] = stats.bytes_by_op.get(ins.op, 0) + ins.out_bytes
+        stats.count_by_op[ins.op] = stats.count_by_op.get(ins.op, 0) + 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Topology-declared groupings
+# ---------------------------------------------------------------------------
+
+
+Grouping = FrozenSet[FrozenSet[int]]
+
+
+def _normalize(groups: Sequence[Sequence[int]]) -> Grouping:
+    return frozenset(frozenset(g) for g in groups)
+
+
+def declared_groupings(topology: Any) -> Dict[Tuple[str, ...], Grouping]:
+    """Every replica grouping the topology declares: one per non-empty
+    subset of mesh axes (a reduction over that subset partitions devices by
+    their coordinates on the remaining axes)."""
+    import itertools
+
+    names = topology.axis_names
+    out: Dict[Tuple[str, ...], Grouping] = {}
+    for r in range(1, len(names) + 1):
+        for subset in itertools.combinations(names, r):
+            out[subset] = _normalize(topology.replica_groups(subset))
+    return out
+
+
+def _device_coords(topology: Any) -> Dict[int, Tuple[int, ...]]:
+    """Flattened device-assignment position -> (pod, stage, data) coords."""
+    import numpy as np
+
+    shape = topology.shape
+    return {
+        i: tuple(int(c) for c in coords)
+        for i, coords in enumerate(np.ndindex(*shape))
+    }
+
+
+def _instr_grouping(ins: CollectiveInstr, topology: Any) -> Optional[Grouping]:
+    if ins.replica_groups is None:
+        return None
+    if ins.replica_groups == ():  # replica_groups={} => all devices together
+        return _normalize([list(range(topology.num_devices))])
+    return _normalize(ins.replica_groups)
+
+
+def check_collective_axes(
+    instrs: Sequence[CollectiveInstr],
+    topology: Any,
+    name: str = "collective_axes",
+) -> CheckResult:
+    """Every collective runs over a Topology-declared axis grouping.
+
+    Reductions/gathers must match the grouping of exactly one declared axis
+    subset; permutes must move along the stage axis only. Singleton-group
+    collectives (degenerate axes) are accepted — XLA usually deletes them.
+    """
+    groupings = declared_groupings(topology)
+    coords = _device_coords(topology)
+    stage_dim = topology.axis_names.index("stage")
+    bad: List[str] = []
+    matched: Dict[str, List[str]] = {}
+    for ins in instrs:
+        if ins.op == "collective-permute":
+            for s, t in ins.source_target_pairs or ():
+                cs, ct = coords.get(s), coords.get(t)
+                if cs is None or ct is None:
+                    bad.append(f"permute pair ({s},{t}) outside device grid")
+                    continue
+                moved = [i for i in range(len(cs)) if cs[i] != ct[i]]
+                if moved != [stage_dim]:
+                    bad.append(
+                        f"permute pair ({s},{t}) moves along dims {moved}, "
+                        f"expected stage (dim {stage_dim}) only: {ins.line[:120]}"
+                    )
+            matched.setdefault(ins.op, []).append("stage-neighbour")
+            continue
+        grouping = _instr_grouping(ins, topology)
+        if grouping is None:
+            continue  # no group annotation (single-device module)
+        if all(len(g) == 1 for g in grouping):
+            matched.setdefault(ins.op, []).append("singleton")
+            continue
+        hits = [axes for axes, g in groupings.items() if g == grouping]
+        if not hits:
+            bad.append(
+                f"{ins.op} over undeclared replica groups "
+                f"{sorted(tuple(sorted(g)) for g in grouping)}: {ins.line[:120]}"
+            )
+        else:
+            matched.setdefault(ins.op, []).append("+".join(hits[0]))
+    return CheckResult(
+        name, not bad, "; ".join(bad[:4]),
+        {"matched": matched, "violations": len(bad)},
+    )
+
+
+def check_data_reduction(
+    instrs: Sequence[CollectiveInstr],
+    topology: Any,
+    name: str = "data_reduction",
+) -> CheckResult:
+    """The combined data-axes gradient all-reduce is present iff the
+    topology splits data: over ``("pod", "data")`` on multi-pod shapes —
+    the pod+data pmean exists exactly when pods > 1 (or data > 1).
+
+    Only collectives that actually communicate count: on a 1-data-shard
+    topology the data grouping is all singletons and XLA may legitimately
+    leave the degenerate pmean in place (or delete it)."""
+    want = _normalize(topology.replica_groups(topology.data_axes))
+    present = any(
+        ins.op == "all-reduce"
+        and _instr_grouping(ins, topology) == want
+        and any(len(g) > 1 for g in want)
+        for ins in instrs
+    )
+    need = topology.data_shards > 1
+    ok = present == need
+    detail = "" if ok else (
+        f"all-reduce over data axes {topology.data_axes} "
+        f"{'missing' if need else 'present'} on topology "
+        f"{topology.describe()} with {topology.data_shards} data shard(s)"
+    )
+    return CheckResult(
+        name, ok, detail,
+        {"present": present, "required": need, "data_axes": list(topology.data_axes)},
+    )

@@ -1,0 +1,323 @@
+"""Jaxpr auditor: reusable traversal + named structural checks.
+
+The paper's correctness story is *structural*: per-stage delay FIFOs of exact
+depth, O(stages) live activations under 1F1B, vocab-sized matmuls gated to
+the last stage, fp32 state everywhere. None of these properties shows up in a
+loss curve until it has silently rotted — so they are enforced here, on the
+traced program itself, before any numbers run.
+
+Layer 1 of the static-analysis subsystem (DESIGN.md §8):
+
+* a traversal API (`iter_eqns`, `sub_jaxprs`, `n_eqns`, `max_float_bytes`,
+  `float_dtypes`, `vocab_dot_counts`, `leading_dims_of`) that walks every
+  equation including `scan`/`cond`/`pjit`/`while`/remat sub-jaxprs — the
+  single walker the tests and the matrix runner share;
+* named checks, each returning a `CheckResult`:
+    - ``scan_body_constant_in_microbatches``: jaxpr size (and, for 1F1B,
+      the largest live float buffer) is O(1) in the microbatch count M;
+    - ``no_dot_outside_cond``: vocab-sized `dot_general`s inside scanned
+      tick bodies must sit under a `lax.cond` branch (last-stage gating);
+    - ``dtype_policy``: no f64 anywhere; every float intermediate drawn
+      from an allowed compute set and every float *input* (params,
+      optimizer state) in the declared state dtype — the hook the bf16-
+      compute/f32-state ROADMAP item plugs into;
+    - ``stash_bound``: no activation-shaped float buffer exceeds the
+      2K-1 input-stash slots of the 1F1B schedule.
+
+Checks never assert: they return pass/fail plus the measured evidence, so
+the runner can aggregate a matrix into one JSON report and the tests can
+assert on exactly one property at a time.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Check result
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CheckResult:
+    """Outcome of one named check: verdict + the evidence it measured."""
+
+    name: str
+    passed: bool
+    detail: str = ""
+    data: Dict[str, Any] = field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return self.passed
+
+    def to_json(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Traversal
+# ---------------------------------------------------------------------------
+
+
+def as_jaxpr(jx: Any) -> Any:
+    """Unwrap a ClosedJaxpr (or `make_jaxpr` result) to the underlying Jaxpr."""
+    return jx.jaxpr if hasattr(jx, "jaxpr") else jx
+
+
+def sub_jaxprs(eqn: Any) -> List[Any]:
+    """Sub-jaxprs of one equation: scan/while bodies, cond branches, pjit
+    and custom-vjp calls, remat — anything a params value holds, including
+    tuples of branches."""
+    out: List[Any] = []
+    for v in eqn.params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for w in items:
+            if hasattr(w, "jaxpr"):
+                out.append(w.jaxpr)
+            elif hasattr(w, "eqns"):
+                out.append(w)
+    return out
+
+
+def iter_eqns(jx: Any, _ctx: Tuple[str, ...] = ()) -> Iterator[Tuple[Any, Tuple[str, ...]]]:
+    """Yield ``(eqn, ctx)`` for every equation, recursing into sub-jaxprs.
+
+    ``ctx`` is the tuple of enclosing primitive names (outermost first), so
+    ``"scan" in ctx`` means "inside a scanned body" and ``"cond" in ctx``
+    means "under a cond branch".
+    """
+    jx = as_jaxpr(jx)
+    for eq in jx.eqns:
+        yield eq, _ctx
+        inner = _ctx + (eq.primitive.name,)
+        for sj in sub_jaxprs(eq):
+            yield from iter_eqns(sj, inner)
+
+
+def n_eqns(jx: Any) -> int:
+    """Total equation count including every sub-jaxpr."""
+    return sum(1 for _ in iter_eqns(jx))
+
+
+def _avals_of(eqn: Any) -> Iterator[Any]:
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            yield aval
+
+
+def iter_avals(jx: Any) -> Iterator[Tuple[Any, Any, Tuple[str, ...]]]:
+    """Yield ``(aval, eqn, ctx)`` for every shaped aval in the program,
+    plus the top-level inputs as ``(aval, None, ())``."""
+    for v in list(as_jaxpr(jx).invars) + list(as_jaxpr(jx).constvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            yield aval, None, ()
+    for eq, ctx in iter_eqns(jx):
+        for aval in _avals_of(eq):
+            yield aval, eq, ctx
+
+
+def _is_float(aval: Any) -> bool:
+    return jnp.issubdtype(aval.dtype, jnp.floating)
+
+
+def max_float_bytes(jx: Any) -> int:
+    """Largest floating-point intermediate anywhere in the program — the
+    schedule's activation buffers dominate, so this is the O(M)-vs-O(K)
+    live-memory story (integer token/label inputs are excluded)."""
+    best = 0
+    for aval, _eq, _ctx in iter_avals(jx):
+        if _is_float(aval):
+            best = max(best, aval.size * aval.dtype.itemsize)
+    return best
+
+
+def float_dtypes(jx: Any) -> Dict[str, int]:
+    """Histogram of float dtype names appearing anywhere in the program."""
+    out: Dict[str, int] = {}
+    for aval, _eq, _ctx in iter_avals(jx):
+        if _is_float(aval):
+            name = jnp.dtype(aval.dtype).name
+            out[name] = out.get(name, 0) + 1
+    return out
+
+
+def vocab_dot_counts(jx: Any, vocab: int) -> Dict[str, int]:
+    """Count `dot_general`s with a vocab-sized float output inside scanned
+    bodies, split by whether they sit under a `lax.cond` branch."""
+    counts = {"outside_cond": 0, "inside_cond": 0}
+    for eq, ctx in iter_eqns(jx):
+        if "scan" not in ctx or eq.primitive.name != "dot_general":
+            continue
+        hit = any(
+            getattr(v.aval, "shape", ()) and v.aval.shape[-1] == vocab
+            and _is_float(v.aval)
+            for v in eq.outvars
+        )
+        if hit:
+            counts["inside_cond" if "cond" in ctx else "outside_cond"] += 1
+    return counts
+
+
+def leading_dims_of(jx: Any, trailing_shape: Sequence[int]) -> List[int]:
+    """Leading dims of every float aval shaped ``(q, *trailing_shape)`` —
+    the slot counts of stacked activation buffers (the 1F1B input stash)."""
+    trail = tuple(trailing_shape)
+    out = []
+    for aval, _eq, _ctx in iter_avals(jx):
+        if (
+            _is_float(aval)
+            and len(aval.shape) == len(trail) + 1
+            and tuple(aval.shape[1:]) == trail
+        ):
+            out.append(int(aval.shape[0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Named checks
+# ---------------------------------------------------------------------------
+
+
+def check_scan_body_constant_in_microbatches(
+    jaxprs_by_m: Mapping[int, Any],
+    expect_const_bytes: bool = True,
+    name: str = "scan_body_constant_in_microbatches",
+) -> CheckResult:
+    """The traced program must be O(1) in the microbatch count M.
+
+    Both schedules scan their tick body, so the equation count must be
+    identical across M. ``expect_const_bytes=True`` (1F1B) additionally pins
+    the largest live float buffer — the O(K) stash property;
+    ``expect_const_bytes=False`` (fill-drain) instead demands the buffer
+    *grows* with M, which proves the measurement sees schedule memory and is
+    not vacuously constant.
+    """
+    ms = sorted(jaxprs_by_m)
+    if len(ms) < 2:
+        return CheckResult(name, False, f"need >= 2 microbatch counts, got {ms}")
+    eqns = {m: n_eqns(jaxprs_by_m[m]) for m in ms}
+    fbytes = {m: max_float_bytes(jaxprs_by_m[m]) for m in ms}
+    ok_eqns = len(set(eqns.values())) == 1
+    if expect_const_bytes:
+        ok_bytes = len(set(fbytes.values())) == 1
+        want = "constant"
+    else:
+        ok_bytes = all(fbytes[a] < fbytes[b] for a, b in zip(ms, ms[1:]))
+        want = "growing"
+    detail = "" if (ok_eqns and ok_bytes) else (
+        f"eqns {eqns} must be constant in M; max float bytes {fbytes} "
+        f"must be {want} in M"
+    )
+    return CheckResult(
+        name, ok_eqns and ok_bytes, detail,
+        {"eqns": eqns, "max_float_bytes": fbytes},
+    )
+
+
+def check_no_dot_outside_cond(
+    jx: Any,
+    vocab: int,
+    require_gated: bool = True,
+    name: str = "no_dot_outside_cond",
+) -> CheckResult:
+    """No vocab-sized matmul in a scanned tick body outside a `lax.cond`.
+
+    The O(vocab) LM-head matmul (and its vjp) must only run on the last
+    stage's branch; an ungated one makes every stage pay for the head every
+    tick. ``require_gated=True`` (1F1B) also demands the gated dot exists —
+    a check that finds zero dots anywhere is measuring the wrong program.
+    """
+    counts = vocab_dot_counts(jx, vocab)
+    ok = counts["outside_cond"] == 0
+    if require_gated:
+        ok = ok and counts["inside_cond"] >= 1
+    detail = "" if ok else (
+        f"vocab({vocab})-sized dot_generals in scanned bodies: {counts}; "
+        "expected 0 outside lax.cond"
+        + (" and >= 1 inside" if require_gated else "")
+    )
+    return CheckResult(name, ok, detail, dict(counts))
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """Float-dtype discipline for one traced program.
+
+    ``allowed_float`` bounds every float intermediate, ``forbidden`` is
+    rejected anywhere (f64 creeps in through numpy scalars and x64 mode),
+    and ``state_dtype`` — when set — pins the dtype of every float *input*
+    of the program: parameters and optimizer state. The repo today is
+    fp32-everywhere (`F32_POLICY`); `BF16_COMPUTE_POLICY` is the planned
+    mixed-precision regime where intermediates may be bf16 but master
+    params/moments stay fp32.
+    """
+
+    allowed_float: Tuple[str, ...] = ("float32",)
+    forbidden: Tuple[str, ...] = ("float64",)  # lint: allow-float64
+    state_dtype: Optional[str] = "float32"
+
+
+F32_POLICY = DtypePolicy()
+BF16_COMPUTE_POLICY = DtypePolicy(
+    allowed_float=("float32", "bfloat16"), state_dtype="float32"
+)
+
+
+def check_dtype_policy(
+    jx: Any,
+    policy: DtypePolicy = F32_POLICY,
+    name: str = "dtype_policy",
+) -> CheckResult:
+    """Every float aval satisfies the policy (see `DtypePolicy`)."""
+    bad: List[str] = []
+    seen = float_dtypes(jx)
+    for dt in seen:
+        if dt in policy.forbidden:
+            bad.append(f"forbidden dtype {dt} appears {seen[dt]}x")
+        elif dt not in policy.allowed_float:
+            bad.append(f"dtype {dt} not in allowed set {policy.allowed_float}")
+    if policy.state_dtype is not None:
+        jxp = as_jaxpr(jx)
+        for i, v in enumerate(list(jxp.invars) + list(jxp.constvars)):
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            if _is_float(aval) and jnp.dtype(aval.dtype).name != policy.state_dtype:
+                bad.append(
+                    f"input #{i} has state dtype {jnp.dtype(aval.dtype).name}, "
+                    f"policy requires {policy.state_dtype}"
+                )
+    return CheckResult(name, not bad, "; ".join(bad), {"float_dtypes": seen})
+
+
+def check_stash_bound(
+    jx: Any,
+    num_stages: int,
+    activation_shape: Sequence[int],
+    name: str = "stash_bound",
+) -> CheckResult:
+    """The 1F1B input stash never exceeds its 2K-1 slots.
+
+    Stage k re-reads its forward input 2(K-1-k) ticks later, so 2K-1 slots
+    are necessary and sufficient; a wider stash silently reintroduces the
+    O(M) memory the schedule exists to avoid. Every float buffer stacked
+    over the activation shape ``(mb, S, d)`` must have <= 2K-1 slots, and
+    the stash itself (exactly 2K-1) must be present — a trace with no
+    stacked activation buffer at all is measuring the wrong program.
+    """
+    bound = 2 * num_stages - 1
+    dims = leading_dims_of(jx, activation_shape)
+    over = [d for d in dims if d > bound]
+    ok = not over and bound in dims
+    detail = "" if ok else (
+        f"activation{tuple(activation_shape)} buffers with slot counts {dims}; "
+        f"bound 2K-1 = {bound}"
+        + ("" if bound in dims else " (expected stash not found)")
+    )
+    return CheckResult(
+        name, ok, detail, {"slot_counts": dims, "bound": bound}
+    )

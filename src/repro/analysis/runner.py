@@ -1,0 +1,272 @@
+"""Matrix driver: audit the real engine over the engine matrix.
+
+``python -m repro.analysis --matrix smoke`` traces and compiles the REAL
+`SpmdEngine` step — not a mock — over the full cross-product
+
+    {fill_drain, 1f1b} x {sync, async} x
+    {adam, basis_rotation, pipedream_lr, delay_compensation} x
+    {1-pod, 2-pod}
+
+on tiny shapes (2 stages, 2 microbatches, forced host devices), runs every
+named check from `repro.analysis.jaxpr` / `repro.analysis.hlo` against the
+jaxpr and the optimized HLO, runs the repo AST lint, and emits one JSON
+report. Exit status is non-zero if anything fails — the CI `analyze` step
+gates on it (DESIGN.md §8).
+
+Which checks run where:
+
+* per cell: ``dtype_policy`` on the step jaxpr; ``no_dot_outside_cond`` and
+  ``stash_bound`` per the schedule's declared invariants
+  (`engine.schedules.SCHEDULE_INVARIANTS`); ``collective_axes`` and
+  ``data_reduction`` on the compiled step's optimized HLO.
+* per (schedule, topology): ``scan_body_constant_in_microbatches`` on the
+  schedule's grad program at two microbatch counts (the optimizer does not
+  enter the grad trace, so this is hoisted out of the optimizer axis).
+* once: the AST lint over ``src/repro``.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.jaxpr import (
+    CheckResult,
+    F32_POLICY,
+    check_dtype_policy,
+    check_no_dot_outside_cond,
+    check_scan_body_constant_in_microbatches,
+    check_stash_bound,
+)
+
+SCHEDULES = ("fill_drain", "1f1b")
+SYNC_MODES = ("sync", "async")
+OPTIMIZERS = ("adam", "basis_rotation", "pipedream_lr", "delay_compensation")
+TOPOLOGIES = ("1pod", "2pod")
+
+# smallest shapes that keep every invariant observable: vocab distinct from
+# every other dimension so vocab-sized dots are unambiguous; 2 stages so the
+# delay FIFO, the cond gate, and the stash are all non-trivial
+_K = 2
+_M = 2
+_SEQ = 8
+_M_SCALING = (2, 6)  # microbatch counts for the O(1)-in-M check
+
+
+def _tiny_model_cfg():
+    from repro.configs.base import AttentionConfig, BlockSpec, ModelConfig
+
+    return ModelConfig(
+        num_layers=2, d_model=16, d_ff=24, vocab_size=96, max_seq_len=32,
+        attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8),
+        pattern=(BlockSpec("attn", "dense"),), scan_layers=False,
+    )
+
+
+def _opt_cfg(name: str):
+    from repro.configs.base import OptimizerConfig
+
+    kw: Dict[str, Any] = dict(name=name, learning_rate=1e-3, total_steps=4,
+                              schedule="constant")
+    if name == "basis_rotation":
+        kw.update(rotation_freq=2, stage_aware=True)
+    return OptimizerConfig(**kw)
+
+
+def _topology(label: str):
+    from repro.launch.topology import Topology
+
+    if label == "1pod":
+        return Topology(stages=_K, data=1)
+    if label == "2pod":
+        return Topology(stages=_K, data=1, pods=2)
+    raise ValueError(f"unknown topology label {label!r}")
+
+
+def required_devices() -> int:
+    return max(_topology(t).num_devices for t in TOPOLOGIES)
+
+
+# ---------------------------------------------------------------------------
+# Cell + grid audits
+# ---------------------------------------------------------------------------
+
+
+def audit_schedule_scaling(schedule: str, topo_label: str) -> CheckResult:
+    """O(1)-in-M jaxpr/buffer check on the schedule's grad program."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.schedules import SCHEDULE_INVARIANTS, make_schedule_grad
+    from repro.engine.spmd import stack_stage_params
+    from repro.models import init_model
+
+    cfg = _tiny_model_cfg()
+    topo = _topology(topo_label)
+    mesh = topo.make_mesh()
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    stacked_s, shared_s = jax.eval_shape(
+        lambda p: stack_stage_params(p, cfg, _K), shapes
+    )
+    mb = topo.data_shards
+    jaxprs = {}
+    for m in _M_SCALING:
+        gf = make_schedule_grad(
+            cfg, mesh, _K, m, schedule=schedule,
+            data_axis=topo.schedule_data_axis,
+        )
+        tok = jax.ShapeDtypeStruct((m, mb, _SEQ), jnp.int32)
+        jaxprs[m] = jax.make_jaxpr(gf)(
+            stacked_s, shared_s, {"tokens": tok, "labels": tok}
+        )
+    return check_scan_body_constant_in_microbatches(
+        jaxprs,
+        expect_const_bytes=SCHEDULE_INVARIANTS[schedule]["const_float_bytes_in_M"],
+    )
+
+
+def audit_cell(
+    schedule: str,
+    sync_mode: str,
+    opt_name: str,
+    topo_label: str,
+    compile_hlo: bool = True,
+) -> List[CheckResult]:
+    """All per-cell checks against the real SpmdEngine step."""
+    from repro.analysis.hlo import (
+        check_collective_axes,
+        check_data_reduction,
+        parse_collectives,
+    )
+    from repro.engine.schedules import SCHEDULE_INVARIANTS
+    from repro.engine.spmd import SpmdEngine
+
+    cfg = _tiny_model_cfg()
+    topo = _topology(topo_label)
+    inv = SCHEDULE_INVARIANTS[schedule]  # KeyError = undeclared schedule
+    engine = SpmdEngine(
+        cfg, _opt_cfg(opt_name), num_stages=_K, num_microbatches=_M,
+        async_grads=(sync_mode == "async"), schedule=schedule, topology=topo,
+    )
+    jx = engine.step_jaxpr(seq_len=_SEQ)
+    results = [check_dtype_policy(jx, F32_POLICY)]
+    results.append(
+        check_no_dot_outside_cond(
+            jx, cfg.vocab_size, require_gated=inv["vocab_dot_gated"]
+        )
+    )
+    if inv["stash_bound"]:
+        # inside shard_map the global microbatch (data_shards rows) is split
+        # over the data axes, so the per-device stash holds 1-row activations
+        results.append(
+            check_stash_bound(jx, _K, (1, _SEQ, cfg.d_model))
+        )
+    if compile_hlo:
+        hlo = engine.compiled_step(seq_len=_SEQ).as_text()
+        instrs = parse_collectives(hlo)
+        results.append(check_collective_axes(instrs, topo))
+        results.append(check_data_reduction(instrs, topo))
+    return results
+
+
+def run_matrix(
+    matrix: str = "smoke",
+    optimizers: Optional[Tuple[str, ...]] = None,
+    compile_hlo: bool = True,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """Run the full grid + lint; return the JSON-able report."""
+    from repro.analysis.lint import check_repo_lint
+
+    if matrix != "smoke":
+        raise ValueError(f"unknown matrix {matrix!r} (only 'smoke' exists)")
+    opts = optimizers or OPTIMIZERS
+
+    report: Dict[str, Any] = {"matrix": matrix, "cells": [], "scaling": [],
+                              "lint": None, "passed": True}
+
+    def note(tag: str, results: List[CheckResult]):
+        ok = all(r.passed for r in results)
+        report["passed"] = report["passed"] and ok
+        if verbose:
+            states = ", ".join(
+                f"{r.name}={'PASS' if r.passed else 'FAIL'}" for r in results
+            )
+            print(f"[{'ok' if ok else 'FAIL'}] {tag}: {states}", flush=True)
+        return ok
+
+    for schedule, topo_label in itertools.product(SCHEDULES, TOPOLOGIES):
+        res = audit_schedule_scaling(schedule, topo_label)
+        note(f"scaling {schedule}/{topo_label}", [res])
+        report["scaling"].append(
+            {"schedule": schedule, "topology": topo_label,
+             "checks": [res.to_json()]}
+        )
+
+    for schedule, sync_mode, opt_name, topo_label in itertools.product(
+        SCHEDULES, SYNC_MODES, opts, TOPOLOGIES
+    ):
+        results = audit_cell(
+            schedule, sync_mode, opt_name, topo_label, compile_hlo=compile_hlo
+        )
+        note(f"{schedule}/{sync_mode}/{opt_name}/{topo_label}", results)
+        report["cells"].append({
+            "schedule": schedule, "sync": sync_mode, "optimizer": opt_name,
+            "topology": topo_label,
+            "checks": [r.to_json() for r in results],
+        })
+
+    lint = check_repo_lint()
+    note("ast_lint src/repro", [lint])
+    report["lint"] = lint.to_json()
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant checker for the engine matrix",
+    )
+    p.add_argument("--matrix", default="smoke", help="grid to audit (smoke)")
+    p.add_argument("--out", default=None, help="write the JSON report here")
+    p.add_argument(
+        "--optimizers", default=None,
+        help="comma-separated subset of the optimizer axis (default: all)",
+    )
+    p.add_argument(
+        "--no-hlo", action="store_true",
+        help="skip the compile + collective checks (jaxpr/lint only, faster)",
+    )
+    p.add_argument(
+        "--lint-only", action="store_true",
+        help="run only the AST lint over src/repro",
+    )
+    args = p.parse_args(argv)
+
+    if args.lint_only:
+        from repro.analysis.lint import check_repo_lint
+
+        lint = check_repo_lint()
+        report = {"matrix": None, "cells": [], "scaling": [],
+                  "lint": lint.to_json(), "passed": lint.passed}
+        print(f"ast_lint: {'PASS' if lint.passed else 'FAIL'} {lint.detail}")
+    else:
+        opts = tuple(args.optimizers.split(",")) if args.optimizers else None
+        report = run_matrix(
+            args.matrix, optimizers=opts, compile_hlo=not args.no_hlo
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"report -> {args.out}")
+    n_checks = sum(len(c["checks"]) for c in report["cells"]) + \
+        sum(len(s["checks"]) for s in report["scaling"]) + 1
+    print(f"analysis {'PASSED' if report['passed'] else 'FAILED'} "
+          f"({n_checks} check runs)")
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,9 +47,15 @@ class SyntheticLM:
 
     @property
     def table(self) -> np.ndarray:
-        """Dense transition table — small vocabs only (tests/analysis)."""
+        """Dense transition table — small vocabs only (tests/analysis).
+
+        Returned as float32: the old f64 cast doubled the cache for no
+        benefit and tripped the repo dtype policy. Sampling itself
+        (`sample` -> `_rows` -> cumsum) is untouched, so fixed-seed token
+        streams are bit-identical (regression-tested).
+        """
         assert self.vocab <= 4096, "dense table only for small vocabularies"
-        return self._rows(np.arange(self.vocab)).astype(np.float64)
+        return self._rows(np.arange(self.vocab)).astype(np.float32)
 
     def sample(self, batch: int, seq_len: int) -> np.ndarray:
         out = np.empty((batch, seq_len + 1), np.int32)

@@ -59,6 +59,32 @@ from repro.models.transformer import block_train
 
 SCHEDULES = ("fill_drain", "1f1b")
 
+# Structural invariants each schedule promises, consumed by the static
+# analyzer (`repro.analysis`, DESIGN.md §8). A new schedule MUST declare its
+# row here — the matrix runner refuses to audit undeclared schedules:
+#   const_float_bytes_in_M  largest live float buffer is O(1) in the
+#                           microbatch count (1F1B's O(K) stash property;
+#                           fill-drain's buffers legitimately grow with M,
+#                           which the analyzer checks as non-vacuous growth)
+#   vocab_dot_gated         the O(vocab) LM-head matmul inside the scanned
+#                           tick body must sit under a lax.cond (and exist);
+#                           schedules computing logits outside the scan set
+#                           False — the analyzer still requires zero
+#                           ungated vocab dots inside the scan either way
+#   stash_bound             the 2K-1 input-stash bound applies
+SCHEDULE_INVARIANTS = {
+    "fill_drain": {
+        "const_float_bytes_in_M": False,
+        "vocab_dot_gated": False,
+        "stash_bound": False,
+    },
+    "1f1b": {
+        "const_float_bytes_in_M": True,
+        "vocab_dot_gated": True,
+        "stash_bound": True,
+    },
+}
+
 
 def _stage_apply_fn(cfg: ModelConfig):
     """stage_f(wk_raw, x): cast the stage's stacked layers and scan them.
@@ -201,14 +227,19 @@ def make_fill_drain_loss(
 # ---------------------------------------------------------------------------
 
 
-def _stash_slots(num_stages: int) -> int:
+def stash_slots(num_stages: int) -> int:
     """Circular-buffer depth of the 1F1B input stash.
 
     Stage k re-reads its forward input 2(K-1-k) ticks later; the worst case
     (stage 0) is 2(K-1), so 2K - 1 slots suffice for every stage and a slot
-    is only overwritten after its consumer has read it.
+    is only overwritten after its consumer has read it. The static analyzer
+    enforces this as the ``stash_bound`` check: no activation-shaped buffer
+    in the traced step may exceed this depth.
     """
     return 2 * num_stages - 1
+
+
+_stash_slots = stash_slots  # pre-analysis-layer private name
 
 
 def make_1f1b_grad(
@@ -227,7 +258,7 @@ def make_1f1b_grad(
     """
     M = num_microbatches
     K = num_stages
-    Q = _stash_slots(K)
+    Q = stash_slots(K)
     stage_f = _stage_apply_fn(cfg)
     embed_f = _embed_fn(cfg)
     head_f = _head_fn(cfg)
@@ -405,5 +436,5 @@ def schedule_activation_bytes(
     if schedule == "fill_drain":
         return (2 * num_microbatches + 1) * act
     if schedule == "1f1b":
-        return (_stash_slots(num_stages) + 2) * act
+        return (stash_slots(num_stages) + 2) * act
     raise ValueError(f"unknown pipeline schedule {schedule!r}; one of {SCHEDULES}")

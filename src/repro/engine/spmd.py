@@ -227,7 +227,9 @@ class SpmdEngine(PipelineEngine):
             shared = apply_updates(shared, updates[1])
             return stacked, shared, opt_state, loss
 
+        self._step_fn = _step  # raw step, kept for the static analyzer
         self._jit_step = jax.jit(_step)
+        self._stage_shapes = (stacked_s, shared_s)
 
     def init_state(self, params: Any = None, key: Any = None) -> EngineState:
         from repro.models.model import init_model
@@ -273,6 +275,39 @@ class SpmdEngine(PipelineEngine):
             loss,
             {"ce": loss},
         )
+
+    # -- static-analysis hooks (repro.analysis, DESIGN.md §8) ---------------
+
+    def abstract_step_args(
+        self, seq_len: int = 8, microbatch_size: int = 0
+    ) -> Tuple:
+        """ShapeDtypeStructs for one ``_step`` call — the analyzer traces
+        and lowers the REAL engine step on these, no device arrays built.
+
+        ``microbatch_size`` defaults to the smallest batch the topology
+        admits (one row per data shard).
+        """
+        mb = microbatch_size or self.topology.data_shards
+        stacked_s, shared_s = self._stage_shapes
+        opt_s = jax.eval_shape(self.opt.init, (stacked_s, shared_s))
+        tok = jax.ShapeDtypeStruct(
+            (self.num_microbatches, mb, seq_len), jnp.int32
+        )
+        batch = {"tokens": tok, "labels": tok}
+        t = jax.ShapeDtypeStruct((), jnp.int32)
+        return stacked_s, shared_s, opt_s, batch, t
+
+    def step_jaxpr(self, seq_len: int = 8, microbatch_size: int = 0):
+        """ClosedJaxpr of the full train step (grads + clip + optimizer +
+        delay FIFO) exactly as `step` jits it."""
+        args = self.abstract_step_args(seq_len, microbatch_size)
+        return jax.make_jaxpr(self._step_fn)(*args)
+
+    def compiled_step(self, seq_len: int = 8, microbatch_size: int = 0):
+        """Compiled executable of the step — its optimized HLO
+        (`.as_text()`) is what the collective auditor parses."""
+        args = self.abstract_step_args(seq_len, microbatch_size)
+        return self._jit_step.lower(*args).compile()
 
     def canonical_params(self, state: EngineState) -> Dict:
         """Unstacked (per-layer) parameter tree, e.g. for evaluation."""

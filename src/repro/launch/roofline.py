@@ -17,76 +17,24 @@ scattered size for AG/RS — the per-device traffic proxy).
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
+
+# The collective scanner is shared with the static HLO auditor
+# (`repro.analysis.hlo` owns parsing; this module owns the bandwidth math).
+# Names re-exported for existing callers.
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVE_OPS,
+    DTYPE_BYTES as _DTYPE_BYTES,
+    SHAPE_RE as _SHAPE_RE,
+    CollectiveStats,
+    collective_stats,
+    shape_bytes as _shape_bytes,
+)
 
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s
 ICI_BW = 50e9  # bytes/s/link
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-COLLECTIVE_OPS = (
-    "all-reduce",
-    "all-gather",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
-)
-
-# e.g.  f32[128,1024]{1,0}   or  bf16[2,8]   or tuple elements
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-@dataclass
-class CollectiveStats:
-    bytes_by_op: Dict[str, int] = field(default_factory=dict)
-    count_by_op: Dict[str, int] = field(default_factory=dict)
-
-    @property
-    def total_bytes(self) -> int:
-        return sum(self.bytes_by_op.values())
-
-
-# one HLO instruction: "%name = <output type(s)> <op>(...)" — we bill each
-# collective by its OUTPUT type(s), which works uniformly for single and
-# tuple-combined collectives (optimized HLO prints operands as bare
-# instruction references without types). For all-reduce / all-to-all /
-# collective-permute output size == operand size; for all-gather it is the
-# gathered (larger) size and for reduce-scatter the scattered (smaller) one —
-# both are natural per-device traffic proxies.
-_INSTR_RE = re.compile(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+?)(-start|-done)?\(")
-
-
-def collective_stats(hlo_text: str) -> CollectiveStats:
-    """Sum output-type bytes of every collective op in (optimized) HLO text."""
-    stats = CollectiveStats()
-    for line in hlo_text.splitlines():
-        m = _INSTR_RE.search(line)
-        if not m:
-            continue
-        out_types, base, suffix = m.group(1), m.group(2), m.group(3)
-        if base not in COLLECTIVE_OPS:
-            continue
-        if suffix == "-done":
-            continue  # counted at -start
-        nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(out_types))
-        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + nbytes
-        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
-    return stats
 
 
 @dataclass

@@ -89,6 +89,33 @@ class Topology:
     def describe(self) -> str:
         return "x".join(str(s) for s in self.shape)
 
+    def replica_groups(self, axes: Tuple[str, ...]) -> Tuple[Tuple[int, ...], ...]:
+        """Replica groups of a collective over ``axes``, as flattened
+        positions in the device assignment (row-major over `shape`).
+
+        A reduction over an axis subset partitions the devices by their
+        coordinates on the remaining axes — this is the ground truth the
+        static HLO auditor (`repro.analysis.hlo`) compares every compiled
+        collective against, so only groupings constructible here count as
+        "declared by the topology".
+        """
+        import numpy as np
+
+        unknown = set(axes) - set(self.axis_names)
+        if not axes or unknown:
+            raise ValueError(
+                f"axes {axes} not declared by topology {self.describe()} "
+                f"with axes {self.axis_names}"
+            )
+        names = self.axis_names
+        keep = [i for i, n in enumerate(names) if n not in axes]
+        move = [i for i, n in enumerate(names) if n in axes]
+        ids = np.arange(self.num_devices).reshape(self.shape)
+        grouped = ids.transpose(keep + move).reshape(
+            -1, int(np.prod([self.shape[i] for i in move]))
+        )
+        return tuple(tuple(int(x) for x in row) for row in grouped)
+
     # -- mesh + specs --------------------------------------------------------
 
     def make_mesh(self) -> Mesh:

@@ -1,0 +1,190 @@
+"""Unit tests for the HLO collective parser + replica-group auditor
+(`repro.analysis.hlo`) on fixture snippets of optimized-HLO text, and for
+`Topology.replica_groups` — the declared ground truth the auditor compares
+against. The parser is shared with `launch/roofline.py`; the re-export must
+stay alive because `launch/dryrun.py` imports through it."""
+import pytest
+
+from repro.analysis.hlo import (
+    CollectiveInstr,
+    check_collective_axes,
+    check_data_reduction,
+    collective_stats,
+    declared_groupings,
+    parse_collectives,
+    shape_bytes,
+)
+from repro.launch.topology import Topology
+
+# fixture mimicking jax 0.4.37 / CPU optimized-module output: explicit and
+# iota replica groups, async -start/-done pair, tuple-combined all-reduce,
+# and a collective-permute with source_target_pairs
+FIXTURE_HLO = """
+HloModule jit_step, entry_computation_layout={(f32[4,8]{1,0})->f32[4,8]{1,0}}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %sum = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p: f32[4,8]) -> f32[4,8] {
+  %p = f32[4,8]{1,0} parameter(0)
+  %ar = f32[4,8]{1,0} all-reduce(f32[4,8]{1,0} %p), channel_id=1, replica_groups={{0,1},{2,3}}, use_global_device_ids=true, to_apply=%add
+  %ag = f32[8,8]{1,0} all-gather(f32[4,8]{1,0} %p), channel_id=2, replica_groups=[2,2]<=[4], dimensions={0}, use_global_device_ids=true
+  %rs = f32[2,8]{1,0} reduce-scatter(f32[4,8]{1,0} %p), channel_id=3, replica_groups={{0,2},{1,3}}, dimensions={0}, to_apply=%add
+  %cp = f32[4,8]{1,0} collective-permute(f32[4,8]{1,0} %p), channel_id=4, source_target_pairs={{0,2},{1,3}}
+  %ars = f32[4,8]{1,0} all-reduce-start(f32[4,8]{1,0} %p), channel_id=5, replica_groups={{0,1,2,3}}, to_apply=%add
+  %ard = f32[4,8]{1,0} all-reduce-done(f32[4,8]{1,0} %ars)
+  %tup = (f32[4,8]{1,0}, bf16[2]{0}) all-reduce(f32[4,8]{1,0} %p, bf16[2]{0} %q), channel_id=6, replica_groups={}, to_apply=%add
+  ROOT %out = f32[4,8]{1,0} add(f32[4,8]{1,0} %ar, f32[4,8]{1,0} %ard)
+}
+"""
+
+
+def test_parse_collectives_ops_and_bytes():
+    instrs = parse_collectives(FIXTURE_HLO)
+    assert [i.op for i in instrs] == [
+        "all-reduce", "all-gather", "reduce-scatter", "collective-permute",
+        "all-reduce", "all-reduce",
+    ]
+    by = {}
+    for i in instrs:
+        by.setdefault(i.op, []).append(i)
+    assert by["all-reduce"][0].out_bytes == 4 * 8 * 4
+    assert by["all-gather"][0].out_bytes == 8 * 8 * 4  # gathered (larger) side
+    assert by["reduce-scatter"][0].out_bytes == 2 * 8 * 4  # scattered side
+    # tuple-combined all-reduce bills both output elements (f32 + bf16)
+    assert by["all-reduce"][2].out_bytes == 4 * 8 * 4 + 2 * 2
+    # the -done half is not double counted
+    assert len(by["all-reduce"]) == 3
+
+
+def test_parse_collectives_replica_groups_both_forms():
+    instrs = parse_collectives(FIXTURE_HLO)
+    ar, ag, rs, cp, ars, tup = instrs
+    assert ar.replica_groups == ((0, 1), (2, 3))
+    # iota form [2,2]<=[4] expands row-major
+    assert ag.replica_groups == ((0, 1), (2, 3))
+    assert rs.replica_groups == ((0, 2), (1, 3))
+    assert cp.source_target_pairs == ((0, 2), (1, 3))
+    assert ars.replica_groups == ((0, 1, 2, 3),)
+    assert tup.replica_groups == ()  # {} = all devices together
+
+
+def test_parse_iota_with_transpose():
+    hlo = ("%ag = f32[4,4]{1,0} all-gather(f32[2,4]{1,0} %p), "
+           "replica_groups=[2,2]<=[2,2]T(1,0), dimensions={0}")
+    (ins,) = parse_collectives("%x = f32[] add(...)\n" + hlo)
+    assert ins.replica_groups == ((0, 2), (1, 3))
+
+
+def test_collective_stats_totals_and_roofline_reexport():
+    stats = collective_stats(FIXTURE_HLO)
+    assert stats.count_by_op["all-reduce"] == 3
+    assert stats.count_by_op["collective-permute"] == 1
+    assert stats.total_bytes == sum(
+        i.out_bytes for i in parse_collectives(FIXTURE_HLO)
+    )
+    # launch/roofline.py (and through it launch/dryrun.py) must keep working
+    from repro.launch import roofline
+
+    assert roofline.collective_stats is collective_stats
+    assert shape_bytes("bf16", "2,3") == 12
+
+
+# ---------------------------------------------------------------------------
+# Topology.replica_groups: the declared ground truth
+# ---------------------------------------------------------------------------
+
+
+def test_replica_groups_single_pod():
+    t = Topology(stages=2, data=2)  # shape (2, 2), row-major ids 0..3
+    assert t.replica_groups(("stage",)) == ((0, 2), (1, 3))
+    assert t.replica_groups(("data",)) == ((0, 1), (2, 3))
+    assert t.replica_groups(("stage", "data")) == ((0, 1, 2, 3),)
+    with pytest.raises(ValueError):
+        t.replica_groups(("pod",))  # pod axis not declared when pods == 1
+    with pytest.raises(ValueError):
+        t.replica_groups(())
+
+
+def test_replica_groups_multi_pod():
+    t = Topology(stages=2, data=1, pods=2)  # shape (2, 2, 1)
+    assert t.replica_groups(("stage",)) == ((0, 1), (2, 3))
+    assert t.replica_groups(("pod",)) == ((0, 2), (1, 3))
+    # the combined data-axes (pod, data) group: one per stage
+    assert t.replica_groups(t.data_axes) == ((0, 2), (1, 3))
+    groupings = declared_groupings(t)
+    assert frozenset({frozenset({0, 2}), frozenset({1, 3})}) in \
+        groupings.values()
+    assert len(groupings) == 7  # all non-empty subsets of 3 axes
+
+
+# ---------------------------------------------------------------------------
+# the auditor checks on synthetic instruction lists
+# ---------------------------------------------------------------------------
+
+
+def _ar(groups):
+    return CollectiveInstr(op="all-reduce", out_bytes=128,
+                           replica_groups=groups, line="fixture")
+
+
+def _cp(pairs):
+    return CollectiveInstr(op="collective-permute", out_bytes=128,
+                           source_target_pairs=pairs, line="fixture")
+
+
+def test_check_collective_axes_accepts_declared_groupings():
+    t = Topology(stages=2, data=2)
+    instrs = [
+        _ar(((0, 2), (1, 3))),   # stage reduction
+        _ar(((0, 1), (2, 3))),   # data reduction
+        _ar(((0, 1, 2, 3),)),    # global (e.g. grad-clip norm)
+        _ar(()),                 # replica_groups={} = global
+        _ar(((0,), (1,), (2,), (3,))),  # degenerate singletons: accepted
+        _cp(((0, 2), (1, 3))),   # neighbour shift along stage
+    ]
+    res = check_collective_axes(instrs, t)
+    assert res.passed, res.detail
+    assert "stage" in str(res.data["matched"]["all-reduce"])
+
+
+def test_check_collective_axes_rejects_stray_groups_and_cross_axis_permute():
+    t = Topology(stages=2, data=2)
+    diag = check_collective_axes([_ar(((0, 3), (1, 2)))], t)
+    assert not diag.passed and "undeclared" in diag.detail
+
+    # permute along the data axis: activations leaking between replicas
+    leak = check_collective_axes([_cp(((0, 1),))], t)
+    assert not leak.passed and "stage" in leak.detail
+
+    # multi-pod: a permute crossing the pod axis is also rejected
+    t2 = Topology(stages=2, data=1, pods=2)
+    cross_pod = check_collective_axes([_cp(((0, 2),))], t2)
+    assert not cross_pod.passed
+    ok = check_collective_axes([_cp(((0, 1), (2, 3)))], t2)
+    assert ok.passed, ok.detail
+
+
+def test_check_data_reduction_iff():
+    sharded = Topology(stages=2, data=2)
+    want = sharded.replica_groups(("data",))
+    assert check_data_reduction([_ar(want)], sharded).passed
+    missing = check_data_reduction([_ar(((0, 2), (1, 3)))], sharded)
+    assert not missing.passed and "missing" in missing.detail
+
+    # 1 data shard: the degenerate singleton-group pmean XLA may leave in
+    # place does NOT count as a data reduction — absence is required and ok
+    solo = Topology(stages=2, data=1)
+    assert check_data_reduction([], solo).passed
+    leftover = [_ar(((0,), (1,)))]
+    assert check_data_reduction(leftover, solo).passed
+
+    # multi-pod with data=1 still data-reduces across pods
+    pods = Topology(stages=2, data=1, pods=2)
+    assert pods.data_shards == 2
+    assert check_data_reduction([_ar(pods.replica_groups(pods.data_axes))],
+                                pods).passed
+    assert not check_data_reduction([], pods).passed
