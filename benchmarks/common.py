@@ -103,7 +103,9 @@ for r in runs:
                            total_steps=r["steps"], rotation_freq=r["rotation_freq"],
                            **r["okw"])
     engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=K,
-                        topology=Topology(stages=K, data=1))
+                        topology=Topology(stages=K, data=1),
+                        schedule=r["schedule"], use_kernels=r["use_kernels"],
+                        precision=r["precision"])
     params = init_model(jax.random.PRNGKey(r["seed"]), cfg)
     state = engine.init_state(params=params)
     data = batches(cfg, r["batch"], r["seq"], seed=r["seed"])
@@ -131,7 +133,8 @@ def spmd_train_curves(runs: List[Dict]) -> List[Dict]:
     import subprocess
 
     defaults = {"num_layers": 8, "lr": 3e-3, "seed": 0, "batch": 8, "seq": 32,
-                "rotation_freq": 5, "okw": {}}
+                "rotation_freq": 5, "okw": {}, "schedule": "fill_drain",
+                "use_kernels": False, "precision": "f32"}
     runs = [{**defaults, **r} for r in runs]
     script = SPMD_CURVES_SCRIPT % {
         "devices": max(r["stages"] for r in runs),

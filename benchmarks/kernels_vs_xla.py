@@ -1,14 +1,26 @@
-"""Pallas kernel path vs XLA baseline for the basis-rotation update.
+"""Pallas kernel path vs XLA baseline: optimizer update, fused Adam scale,
+flash attention forward/backward, and the full train step.
 
 Times one full `basis_rotation_adam` update on a stage-stacked
-``(K, per, m, n)`` leaf with ``use_kernels`` on/off, plus the fused
-Adam-scale kernel against its pure-jnp reference in isolation. Off-TPU the
-kernels run in interpret mode — the comparison there validates wiring and
-correctness, not speed (Mosaic compilation only exists on TPU); on a TPU
-host the same rows measure the real kernel path.
+``(K, per, m, n)`` leaf with ``use_kernels`` on/off, the fused Adam-scale
+kernel against its pure-jnp reference, the flash-attention kernel (forward
+AND its custom-vjp backward) against `kernels/ref.py::flash_attention_ref`
+under `jax.grad`, and a complete SpmdEngine step with the kernel path and
+precision policy on/off — plus a step-time/HBM roofline row from the
+compiled step's cost analysis. Off-TPU the kernels run in interpret mode —
+the comparison there validates wiring and correctness, not speed (Mosaic
+compilation only exists on TPU); on a TPU host the same rows measure the
+real kernel path.
+
+``--bench-out BENCH_foo.json`` additionally runs the pinned 2-stage smoke
+training (1F1B, ``use_kernels``, bf16) and writes the perf-trajectory
+artifact (rows + step time + final loss) that CI uploads so later PRs are
+tracked against it; the committed baseline lives at
+``benchmarks/BENCH_kernels_smoke.json``.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -78,10 +90,177 @@ def adam_scale_rows(shape):
     ]
 
 
+def attention_rows(B: int, H: int, S: int, dh: int, window=None):
+    """Flash kernel vs XLA reference: forward and `jax.grad` backward."""
+    from repro.kernels import ops, ref
+
+    shape = (B, H, S, dh)
+    q = jax.random.normal(jax.random.PRNGKey(0), shape)
+    k = jax.random.normal(jax.random.PRNGKey(1), shape)
+    v = jax.random.normal(jax.random.PRNGKey(2), shape)
+    do = jax.random.normal(jax.random.PRNGKey(3), shape)
+
+    kfwd = jax.jit(lambda q, k, v: ops.attention(q, k, v, window=window))
+    rfwd = jax.jit(
+        lambda q, k, v: ref.flash_attention_ref(q, k, v, window=window)
+    )
+    err_f = float(jnp.max(jnp.abs(kfwd(q, k, v) - rfwd(q, k, v))))
+
+    def _gradfn(fwd):
+        return jax.jit(jax.grad(
+            lambda q, k, v: jnp.sum(fwd(q, k, v) * do), argnums=(0, 1, 2)
+        ))
+
+    kbwd, rbwd = _gradfn(kfwd), _gradfn(rfwd)
+    err_b = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(kbwd(q, k, v), rbwd(q, k, v))
+    )
+    dims = f"B={B};H={H};S={S};dh={dh}"
+    return [
+        {"name": "kernels_vs_xla/attention_fwd_kernel",
+         "us_per_call": _time(kfwd, q, k, v),
+         "derived": f"{dims};maxerr={err_f:.1e}"},
+        {"name": "kernels_vs_xla/attention_fwd_xla",
+         "us_per_call": _time(rfwd, q, k, v), "derived": dims},
+        {"name": "kernels_vs_xla/attention_bwd_kernel",
+         "us_per_call": _time(kbwd, q, k, v),
+         "derived": f"{dims};maxerr={err_b:.1e}"},
+        {"name": "kernels_vs_xla/attention_bwd_xla",
+         "us_per_call": _time(rbwd, q, k, v), "derived": dims},
+    ]
+
+
+# full-step / roofline model: single-stage engine so the benchmark runs on
+# one device in-process; the pipeline dimension is measured by the spmd
+# curve benchmarks, not here
+_STEP_CONFIGS = (
+    ("xla_f32", False, "f32"),
+    ("kernels_f32", True, "f32"),
+    ("kernels_bf16", True, "bf16"),
+)
+
+
+def _step_engine(num_layers: int, use_kernels: bool, precision: str):
+    from repro.configs.base import (
+        AttentionConfig, BlockSpec, ModelConfig, OptimizerConfig,
+    )
+    from repro.engine.spmd import SpmdEngine
+    from repro.launch.topology import Topology
+
+    cfg = ModelConfig(
+        name="bench_step", num_layers=num_layers, d_model=64, d_ff=256,
+        vocab_size=128, max_seq_len=64,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16),
+        pattern=(BlockSpec("attn", "dense"),), scan_layers=False,
+    )
+    ocfg = OptimizerConfig(name="adam", learning_rate=1e-3, total_steps=8,
+                           schedule="constant")
+    return SpmdEngine(
+        cfg, ocfg, num_stages=1, num_microbatches=1,
+        topology=Topology(stages=1, data=1),
+        use_kernels=use_kernels, precision=precision,
+    )
+
+
+def full_step_rows(num_layers: int, batch: int, seq: int):
+    """One complete train step (grads + clip + Adam) per kernel/precision
+    configuration, plus the roofline row for the kernel+bf16 step."""
+    rows = []
+    for label, use_kernels, precision in _STEP_CONFIGS:
+        engine = _step_engine(num_layers, use_kernels, precision)
+        state = engine.init_state(key=jax.random.PRNGKey(0))
+        tok = jax.random.randint(
+            jax.random.PRNGKey(1), (1, batch, seq), 0, engine.cfg.vocab_size
+        )
+        batch_d = {"tokens": tok, "labels": tok}
+        stacked, shared = state.params
+
+        def step(stacked, shared, opt_state, b):
+            return engine._jit_step(stacked, shared, opt_state, b,
+                                    jnp.int32(0))
+
+        us = _time(step, stacked, shared, state.opt_state, batch_d)
+        rows.append({
+            "name": f"kernels_vs_xla/full_step_{label}",
+            "us_per_call": us,
+            "derived": f"layers={num_layers};batch={batch};seq={seq}",
+        })
+        if label == "kernels_bf16":
+            rows.append(roofline_row(engine, batch, seq))
+    return rows
+
+
+def roofline_row(engine, batch: int, seq: int):
+    """TPU-v5e roofline terms of the compiled kernel+bf16 step.
+
+    On a CPU host the FLOP/byte counts come from the CPU-compiled module —
+    the row tracks the cost *structure* (bottleneck term, HBM traffic);
+    absolute times are only meaningful on a TPU host.
+    """
+    from repro.launch.roofline import dense_model_flops, roofline_from_compiled
+    from repro.models import init_model, param_count
+
+    compiled = engine.compiled_step(seq_len=seq, microbatch_size=batch)
+    n_params = param_count(
+        init_model(jax.random.PRNGKey(0), engine.cfg)
+    )
+    r = roofline_from_compiled(
+        compiled,
+        model_flops=dense_model_flops(n_params, tokens=batch * seq),
+    )
+    return {
+        "name": "kernels_vs_xla/roofline_step_kernels_bf16",
+        "us_per_call": 1e6 * r.step_time_s,
+        "derived": (
+            f"bottleneck={r.bottleneck};hbm_mb={r.hbm_bytes / 1e6:.1f};"
+            f"gflops={r.flops / 1e9:.2f};useful={r.useful_flops_ratio:.2f}"
+        ),
+    }
+
+
+# pinned perf-trajectory config: 2-stage 1F1B with the full kernel + bf16
+# path — the BENCH artifact tracks (step_time_us, final_loss) across PRs
+BENCH_RUN = {
+    "name": "adam", "stages": 2, "num_layers": 4, "batch": 8, "seq": 32,
+    "lr": 3e-3, "seed": 0, "schedule": "1f1b", "use_kernels": True,
+    "precision": "bf16",
+}
+
+
+def bench_payload(rows, quick: bool):
+    """Assemble the BENCH_*.json perf-trajectory artifact."""
+    from benchmarks.common import spmd_train_curves, tail
+
+    run = {**BENCH_RUN, "steps": 10 if quick else 40}
+    (res,) = spmd_train_curves([run])
+    return {
+        "schema": "repro-bench/v1",
+        "benchmark": "kernels_vs_xla",
+        "created": time.strftime("%Y-%m-%d"),
+        "quick": quick,
+        "rows": rows,
+        "trajectory": {
+            "config": run,
+            "step_time_us": res["us_per_step"],
+            "final_loss": tail(res["losses"], 3),
+            "losses": res["losses"],
+        },
+    }
+
+
 def run(quick: bool = True):
     if quick:
-        return optimizer_rows(2, 1, 32) + adam_scale_rows((64, 64))
-    return optimizer_rows(4, 2, 256) + adam_scale_rows((1024, 1024))
+        return (
+            optimizer_rows(2, 1, 32) + adam_scale_rows((64, 64))
+            + attention_rows(1, 2, 128, 16, window=32)
+            + full_step_rows(num_layers=2, batch=4, seq=32)
+        )
+    return (
+        optimizer_rows(4, 2, 256) + adam_scale_rows((1024, 1024))
+        + attention_rows(2, 4, 512, 64, window=128)
+        + full_step_rows(num_layers=8, batch=8, seq=64)
+    )
 
 
 if __name__ == "__main__":
@@ -93,5 +272,16 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI: interpret mode on CPU)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--bench-out", default=None, metavar="BENCH_*.json",
+                    help="also run the pinned 2-stage smoke training and "
+                         "write the perf-trajectory JSON artifact here")
     args = ap.parse_args()
-    emit(run(quick=args.smoke or not args.full))
+    rows = run(quick=args.smoke or not args.full)
+    emit(rows)
+    if args.bench_out:
+        payload = bench_payload(rows, quick=args.smoke or not args.full)
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"bench trajectory -> {args.bench_out} "
+              f"(step {payload['trajectory']['step_time_us']:.0f}us, "
+              f"final loss {payload['trajectory']['final_loss']:.4f})")

@@ -21,6 +21,7 @@ from repro.analysis.jaxpr import (
     as_jaxpr,
     check_dtype_policy,
     check_no_dot_outside_cond,
+    check_pallas_in_scan,
     check_scan_body_constant_in_microbatches,
     check_stash_bound,
     float_dtypes,
@@ -58,6 +59,7 @@ __all__ = [
     "as_jaxpr",
     "check_dtype_policy",
     "check_no_dot_outside_cond",
+    "check_pallas_in_scan",
     "check_scan_body_constant_in_microbatches",
     "check_stash_bound",
     "float_dtypes",

@@ -259,11 +259,16 @@ class DtypePolicy:
     allowed_float: Tuple[str, ...] = ("float32",)
     forbidden: Tuple[str, ...] = ("float64",)  # lint: allow-float64
     state_dtype: Optional[str] = "float32"
+    # dtypes that MUST appear among the intermediates — makes a permissive
+    # policy non-vacuous: a "bf16 compute" program with no bf16 anywhere is
+    # an f32 program wearing the wrong flag
+    require_present: Tuple[str, ...] = ()
 
 
 F32_POLICY = DtypePolicy()
 BF16_COMPUTE_POLICY = DtypePolicy(
-    allowed_float=("float32", "bfloat16"), state_dtype="float32"
+    allowed_float=("float32", "bfloat16"), state_dtype="float32",
+    require_present=("bfloat16",),
 )
 
 
@@ -280,6 +285,11 @@ def check_dtype_policy(
             bad.append(f"forbidden dtype {dt} appears {seen[dt]}x")
         elif dt not in policy.allowed_float:
             bad.append(f"dtype {dt} not in allowed set {policy.allowed_float}")
+    for dt in policy.require_present:
+        if dt not in seen:
+            bad.append(
+                f"required dtype {dt} appears nowhere (policy is vacuous)"
+            )
     if policy.state_dtype is not None:
         jxp = as_jaxpr(jx)
         for i, v in enumerate(list(jxp.invars) + list(jxp.constvars)):
@@ -292,6 +302,39 @@ def check_dtype_policy(
                     f"policy requires {policy.state_dtype}"
                 )
     return CheckResult(name, not bad, "; ".join(bad), {"float_dtypes": seen})
+
+
+def check_pallas_in_scan(
+    jx: Any,
+    min_calls: int = 3,
+    name: str = "kernel_in_scan",
+) -> CheckResult:
+    """`pallas_call`s must run inside the scanned tick body.
+
+    Under ``use_kernels`` the stage apply is the fused flash attention —
+    one forward kernel plus the two custom-vjp backward kernels (dQ and
+    dK/dV), all of which must appear *inside* a `lax.scan` body: a kernel
+    hoisted out of the scan means the schedule stopped calling it per tick
+    (e.g. the custom_vjp got inlined away by a rewrite). ``min_calls``
+    defaults to the fwd + 2 bwd kernels of one attention site.
+    """
+    in_scan = 0
+    outside = 0
+    for eq, ctx in iter_eqns(jx):
+        if eq.primitive.name != "pallas_call":
+            continue
+        if "scan" in ctx:
+            in_scan += 1
+        else:
+            outside += 1
+    ok = in_scan >= min_calls
+    detail = "" if ok else (
+        f"{in_scan} pallas_call(s) inside scan bodies (need >= {min_calls}); "
+        f"{outside} outside"
+    )
+    return CheckResult(
+        name, ok, detail, {"in_scan": in_scan, "outside_scan": outside}
+    )
 
 
 def check_stash_bound(

@@ -33,10 +33,12 @@ import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.analysis.jaxpr import (
+    BF16_COMPUTE_POLICY,
     CheckResult,
     F32_POLICY,
     check_dtype_policy,
     check_no_dot_outside_cond,
+    check_pallas_in_scan,
     check_scan_body_constant_in_microbatches,
     check_stash_bound,
 )
@@ -45,6 +47,11 @@ SCHEDULES = ("fill_drain", "1f1b")
 SYNC_MODES = ("sync", "async")
 OPTIMIZERS = ("adam", "basis_rotation", "pipedream_lr", "delay_compensation")
 TOPOLOGIES = ("1pod", "2pod")
+# kernel-backed / mixed-precision configurations audited on top of the base
+# matrix: (precision, use_kernels) per schedule — bf16 runs must satisfy
+# BF16_COMPUTE_POLICY (bf16 intermediates REQUIRED, f32 state), and every
+# use_kernels run must keep its pallas_calls inside the scanned tick body
+PRECISION_CELLS = (("bf16", True), ("f32", True), ("bf16", False))
 
 # smallest shapes that keep every invariant observable: vocab distinct from
 # every other dimension so vocab-sized dots are unambiguous; 2 stages so the
@@ -171,6 +178,43 @@ def audit_cell(
     return results
 
 
+def audit_precision_cell(
+    schedule: str, precision: str, use_kernels: bool
+) -> List[CheckResult]:
+    """Dtype-policy + kernel-placement checks on a precision/kernel config.
+
+    Jaxpr-only (no HLO compile): the collective structure is precision-
+    independent and already covered by the base matrix cells. The 1F1B
+    structural invariants (gated vocab head, stash bound) are re-asserted
+    here because `pallas_call` inside the scanned body is exactly the kind
+    of rewrite that could break them.
+    """
+    from repro.engine.schedules import SCHEDULE_INVARIANTS
+    from repro.engine.spmd import SpmdEngine
+
+    cfg = _tiny_model_cfg()
+    inv = SCHEDULE_INVARIANTS[schedule]
+    engine = SpmdEngine(
+        cfg, _opt_cfg("adam"), num_stages=_K, num_microbatches=_M,
+        async_grads=False, schedule=schedule, topology=_topology("1pod"),
+        use_kernels=use_kernels, precision=precision,
+    )
+    jx = engine.step_jaxpr(seq_len=_SEQ)
+    policy = BF16_COMPUTE_POLICY if precision == "bf16" else F32_POLICY
+    results = [check_dtype_policy(jx, policy)]
+    if use_kernels:
+        # one fused forward + the two custom-vjp backward kernels per site
+        results.append(check_pallas_in_scan(jx, min_calls=3))
+    results.append(
+        check_no_dot_outside_cond(
+            jx, cfg.vocab_size, require_gated=inv["vocab_dot_gated"]
+        )
+    )
+    if inv["stash_bound"]:
+        results.append(check_stash_bound(jx, _K, (1, _SEQ, cfg.d_model)))
+    return results
+
+
 def run_matrix(
     matrix: str = "smoke",
     optimizers: Optional[Tuple[str, ...]] = None,
@@ -185,7 +229,7 @@ def run_matrix(
     opts = optimizers or OPTIMIZERS
 
     report: Dict[str, Any] = {"matrix": matrix, "cells": [], "scaling": [],
-                              "lint": None, "passed": True}
+                              "precision": [], "lint": None, "passed": True}
 
     def note(tag: str, results: List[CheckResult]):
         ok = all(r.passed for r in results)
@@ -215,6 +259,18 @@ def run_matrix(
         report["cells"].append({
             "schedule": schedule, "sync": sync_mode, "optimizer": opt_name,
             "topology": topo_label,
+            "checks": [r.to_json() for r in results],
+        })
+
+    for schedule, (precision, use_kernels) in itertools.product(
+        SCHEDULES, PRECISION_CELLS
+    ):
+        results = audit_precision_cell(schedule, precision, use_kernels)
+        kern = "kernels" if use_kernels else "xla"
+        note(f"precision {schedule}/{precision}/{kern}", results)
+        report["precision"].append({
+            "schedule": schedule, "precision": precision,
+            "use_kernels": use_kernels,
             "checks": [r.to_json() for r in results],
         })
 
@@ -262,7 +318,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             json.dump(report, f, indent=2)
         print(f"report -> {args.out}")
     n_checks = sum(len(c["checks"]) for c in report["cells"]) + \
-        sum(len(s["checks"]) for s in report["scaling"]) + 1
+        sum(len(s["checks"]) for s in report["scaling"]) + \
+        sum(len(p["checks"]) for p in report.get("precision", [])) + 1
     print(f"analysis {'PASSED' if report['passed'] else 'FAILED'} "
           f"({n_checks} check runs)")
     return 0 if report["passed"] else 1

@@ -137,6 +137,10 @@ class ModelConfig:
     loss_chunk: int = 0
     dtype: str = "float32"  # compute dtype
     param_dtype: str = "float32"
+    # route the fused Pallas attention (fwd + custom-vjp bwd) into the stage
+    # apply (models/attention.py); the optimizer kernel path is routed
+    # separately through optim.factory.build_optimizer
+    use_kernels: bool = False
 
     # -- derived -----------------------------------------------------------
     @property
@@ -167,6 +171,41 @@ class ModelConfig:
             spec.mixer != "attn" or self.attention.window is not None
             for spec in self.pattern
         )
+
+
+# ---------------------------------------------------------------------------
+# Precision policies
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """Compute/state dtype discipline applied on top of a ModelConfig.
+
+    The layering contract (DESIGN.md §9): the policy only *selects* dtypes;
+    the model's apply path owns every cast (``cast_params`` masters→compute,
+    f32 softmax/CE accumulation, ``logits_fp32``), and the engine/optimizer
+    never see anything but f32 state. ``bf16_compute`` = bf16 activations and
+    matmuls with f32 parameter masters, optimizer state and loss reductions —
+    enforced statically by ``analysis.BF16_COMPUTE_POLICY``.
+    """
+
+    name: str = "f32"
+    dtype: str = "float32"  # activation / matmul compute dtype
+    param_dtype: str = "float32"  # parameter masters (and optimizer state)
+    logits_fp32: bool = True  # CE stability: keep the vocab head f32
+
+    def apply(self, cfg: "ModelConfig") -> "ModelConfig":
+        return cfg.replace(
+            dtype=self.dtype, param_dtype=self.param_dtype,
+            logits_fp32=self.logits_fp32,
+        )
+
+
+PRECISION_POLICIES = {
+    "f32": PrecisionPolicy(),
+    "bf16": PrecisionPolicy(name="bf16_compute", dtype="bfloat16"),
+}
 
 
 # ---------------------------------------------------------------------------

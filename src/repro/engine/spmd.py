@@ -32,7 +32,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.configs.base import (
+    PRECISION_POLICIES,
+    ModelConfig,
+    OptimizerConfig,
+    PrecisionPolicy,
+)
 from repro.engine.base import EngineState, PipelineEngine
 from repro.engine.schedules import make_fill_drain_loss, make_schedule_grad
 from repro.launch.topology import Topology
@@ -172,12 +177,26 @@ class SpmdEngine(PipelineEngine):
         schedule: str = "fill_drain",
         use_kernels: bool = False,
         topology: Optional[Topology] = None,
+        precision: Union[str, PrecisionPolicy, None] = None,
     ):
         from repro.models.model import init_model
         from repro.optim.base import apply_updates, clip_by_global_norm
         from repro.optim.factory import build_optimizer
         from repro.pipeline.delay import stage_delayed_optimizer
 
+        # precision policy rewrites the config's dtypes (None = leave the
+        # caller's cfg untouched); use_kernels additionally routes the fused
+        # flash attention into the stage apply via ModelConfig.use_kernels
+        if isinstance(precision, str):
+            precision = PRECISION_POLICIES[precision]
+        if precision is not None:
+            cfg = precision.apply(cfg)
+        self.precision = (
+            precision.name if precision is not None
+            else ("bf16_compute" if cfg.dtype == "bfloat16" else "f32")
+        )
+        if use_kernels:
+            cfg = cfg.replace(use_kernels=True)
         self.cfg = cfg
         self.schedule = schedule
         self.num_stages = K = num_stages
@@ -331,5 +350,6 @@ class SpmdEngine(PipelineEngine):
         save_sharded_checkpoint(
             path, self.checkpoint_tree(state), num_shards=self.num_stages,
             step=step,
-            meta={"topology": self.topology.describe(), **(meta or {})},
+            meta={"topology": self.topology.describe(),
+                  "precision": self.precision, **(meta or {})},
         )

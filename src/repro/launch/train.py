@@ -60,8 +60,14 @@ def parse_args(argv=None):
     ap.add_argument("--rotation-freq", type=int, default=10)
     ap.add_argument("--stage-aware", action="store_true")
     ap.add_argument("--use-kernels", action="store_true",
-                    help="route optimizer matmuls / fused Adam scale through "
-                         "the Pallas kernels (interpret mode off-TPU)")
+                    help="route the fused flash-attention stage apply (fwd + "
+                         "custom-vjp bwd) and the optimizer matmuls / fused "
+                         "Adam scale through the Pallas kernels (interpret "
+                         "mode off-TPU)")
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="spmd backend: precision policy — bf16 runs "
+                         "activations/matmuls in bf16 with f32 parameter "
+                         "masters, optimizer state and loss accumulations")
     ap.add_argument("--weight-prediction", action="store_true")
     ap.add_argument("--no-stash", action="store_true")
     ap.add_argument("--sync", action="store_true",
@@ -123,9 +129,20 @@ def main(argv=None):
     from repro.optim.factory import build_optimizer
     from repro.pipeline.partition import delay_tree
 
+    if args.precision != "f32" and args.backend != "spmd":
+        raise SystemExit(
+            "--precision bf16 is an spmd-backend policy; the sim backend "
+            "reproduces the paper's f32 runs bit-for-bit"
+        )
+
+    from repro.configs.base import PRECISION_POLICIES
+
     cfg = get_config(args.arch, smoke=args.smoke)
-    # both backends need per-layer leaves (per-stage delays / stage stacking)
-    cfg = cfg.replace(scan_layers=False, dtype="float32", param_dtype="float32")
+    # both backends need per-layer leaves (per-stage delays / stage stacking);
+    # the precision policy owns every dtype knob (f32 = the old forced-f32)
+    cfg = PRECISION_POLICIES[args.precision].apply(
+        cfg.replace(scan_layers=False)
+    )
     if cfg.num_layers % args.stages != 0:
         if args.smoke:
             # pad the reduced config up to the nearest depth that both the
@@ -192,7 +209,7 @@ def main(argv=None):
             cfg, ocfg, num_stages=args.stages,
             num_microbatches=args.microbatches, async_grads=not args.sync,
             schedule=args.schedule, use_kernels=args.use_kernels,
-            topology=topology,
+            topology=topology, precision=args.precision,
         )
     else:
         # --sync drops the simulated delay FIFO (but keeps stage-aware
@@ -234,7 +251,8 @@ def main(argv=None):
         out_meta={"arch": cfg.name, "optimizer": args.optimizer,
                   "stages": args.stages, "backend": args.backend,
                   "schedule": args.schedule if args.backend == "spmd" else None,
-                  "topology": topo_str},
+                  "topology": topo_str, "precision": args.precision,
+                  "use_kernels": args.use_kernels},
     )
     _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
     if losses:

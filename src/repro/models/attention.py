@@ -116,6 +116,22 @@ CHUNKED_ATTN_THRESHOLD = 8192
 QUERY_BLOCK = 2048
 
 
+def _attn_flash(q, k, v, cfg: AttentionConfig) -> jnp.ndarray:
+    """Fused Pallas path (fwd + custom-vjp bwd). The kernel is plain MHA over
+    flattened (B*H) heads, so GQA KV heads are broadcast to full heads first
+    — the repeat is O(S·dh) HBM, dwarfed by not materialising the (S×S)
+    score matrix."""
+    from repro.kernels.flash import flash_attention
+    from repro.kernels.ops import default_interpret
+
+    if cfg.kv_groups > 1:
+        k = jnp.repeat(k, cfg.kv_groups, axis=1)
+        v = jnp.repeat(v, cfg.kv_groups, axis=1)
+    return flash_attention(
+        q, k, v, causal=True, window=cfg.window, interpret=default_interpret()
+    )
+
+
 def _attn_dense(q, k, v, cfg: AttentionConfig, q_offset: int | jnp.ndarray, S_kv: int):
     """Causal (optionally windowed) attention for one query block."""
     Sq = q.shape[2]
@@ -130,14 +146,19 @@ def _attn_dense(q, k, v, cfg: AttentionConfig, q_offset: int | jnp.ndarray, S_kv
     return _gqa_mix(w, v, cfg.kv_groups)
 
 
-def gqa_train(params: dict, x: jnp.ndarray, cfg: AttentionConfig) -> jnp.ndarray:
+def gqa_train(
+    params: dict, x: jnp.ndarray, cfg: AttentionConfig,
+    use_kernels: bool = False,
+) -> jnp.ndarray:
     B, S, d_model = x.shape
     q, k, v = _project_qkv(params, x, cfg)
     positions = jnp.arange(S)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    if S <= CHUNKED_ATTN_THRESHOLD or S % QUERY_BLOCK != 0:
+    if use_kernels:
+        o = _attn_flash(q, k, v, cfg)
+    elif S <= CHUNKED_ATTN_THRESHOLD or S % QUERY_BLOCK != 0:
         o = _attn_dense(q, k, v, cfg, 0, S)
     else:
         nblk = S // QUERY_BLOCK

@@ -48,7 +48,9 @@ def block_train(
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x)
     if spec.mixer == "attn":
-        h = attn.gqa_train(params["mixer"], h, cfg.attention) if cfg.attention.kind == "gqa" \
+        h = attn.gqa_train(params["mixer"], h, cfg.attention,
+                           use_kernels=cfg.use_kernels) \
+            if cfg.attention.kind == "gqa" \
             else attn.mla_train(params["mixer"], h, cfg.attention)
     elif spec.mixer == "mamba":
         h = mb.mamba_train(params["mixer"], h, cfg.ssm)

@@ -93,8 +93,136 @@ def test_flash_attention_bf16():
     k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, dh)).astype(jnp.bfloat16)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, dh)).astype(jnp.bfloat16)
     out = ops.attention(q, k, v, block_q=64, block_k=64)
+    assert out.dtype == jnp.bfloat16  # kernel output stays in q.dtype
     want = ref.flash_attention_ref(q, k, v)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def _qkv(B, H, S, dh, dtype=jnp.float32):
+    q = jax.random.normal(KEY, (B, H, S, dh)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, dh)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, dh)).astype(dtype)
+    return q, k, v
+
+
+def _flash_grads(fwd, q, k, v, do):
+    return jax.grad(
+        lambda q, k, v: jnp.sum(fwd(q, k, v) * do), argnums=(0, 1, 2)
+    )(q, k, v)
+
+
+@pytest.mark.parametrize("window,S,bq,bk", [
+    (None, 256, 64, 64),      # causal, aligned blocks
+    (32, 256, 64, 64),        # window: in-sequence tiles go fully masked
+    (100, 128, 128, 32),      # window wider than bk
+    (None, 200, 128, 128),    # S does not divide the blocks: padded rows
+    (16, 100, 128, 32),       # padding AND a window together
+])
+def test_flash_attention_backward_sweep(window, S, bq, bk):
+    """Custom-vjp backward (recompute dQ/dK/dV kernels) vs jax.grad of the
+    XLA reference, including padded sequence lengths where the cotangents
+    for padded rows must vanish from dK/dV."""
+    B, H, dh = 1, 2, 32
+    q, k, v = _qkv(B, H, S, dh)
+    do = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, dh))
+
+    kfwd = lambda q, k, v: ops.attention(q, k, v, window=window,
+                                         block_q=bq, block_k=bk)
+    rfwd = lambda q, k, v: ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(kfwd(q, k, v)),
+                               np.asarray(rfwd(q, k, v)),
+                               rtol=2e-3, atol=2e-4)
+    got = _flash_grads(kfwd, q, k, v, do)
+    want = _flash_grads(rfwd, q, k, v, do)
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-3, atol=1e-4, err_msg=name)
+
+
+def test_flash_attention_backward_bf16():
+    """bf16 grads track the f32 reference grads and keep the input dtype —
+    the contract the bf16_compute precision policy relies on."""
+    B, H, S, dh = 1, 2, 200, 32  # non-128-multiple S: padded bf16 backward
+    q, k, v = _qkv(B, H, S, dh, jnp.bfloat16)
+    do = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, dh))
+
+    kfwd = lambda q, k, v: ops.attention(q, k, v, window=24)
+    rfwd = lambda q, k, v: ref.flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        window=24,
+    )
+    got = _flash_grads(kfwd, q, k, v, do.astype(jnp.bfloat16))
+    want = _flash_grads(rfwd, q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), do)
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        assert g.dtype == jnp.bfloat16, name
+        np.testing.assert_allclose(np.asarray(g, np.float32), np.asarray(w),
+                                   rtol=6e-2, atol=6e-2, err_msg=name)
+
+
+def test_flash_fully_masked_rows_zero():
+    """Regression: a small window + padding makes whole K-tiles (and, for the
+    padded rows past seq_len-2+window, whole ROWS) fully masked. The unguarded
+    kernel let exp(s - m) = 1 through for masked entries, turning those rows
+    into mean-of-V garbage; they must be exactly zero with an L sentinel."""
+    from repro.kernels.flash import NEG_INF, _flash_forward
+
+    S, window, Sp = 100, 8, 128
+    q, k, v = _qkv(1, 1, S, 16)
+    pad = ((0, 0), (0, Sp - S), (0, 0))
+    qf = jnp.pad(q.reshape(1, S, 16), pad)
+    kf = jnp.pad(k.reshape(1, S, 16), pad)
+    vf = jnp.pad(v.reshape(1, S, 16), pad)
+    o, L = _flash_forward((True, window, 128, 128, S, True), qf, kf, vf)
+
+    # rows > seq_len - 2 + window see no valid key at all
+    first_dead = S - 1 + window
+    assert float(jnp.max(jnp.abs(o[:, first_dead:]))) == 0.0
+    # NEG_INF sentinel (f32 rounds -1e30, so compare against a bound)
+    assert bool(jnp.all(L[:, first_dead:] <= -1e29))
+    # the row just before still attends to key seq_len-1: finite and nonzero
+    assert float(L[0, first_dead - 1]) > -1e29
+    assert float(jnp.max(jnp.abs(o[:, first_dead - 1]))) > 0.0
+    # in-sequence rows agree with the reference despite the dead tiles
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o[:, :S].reshape(1, 1, S, 16)),
+                               np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_gqa_train_kernel_parity(window):
+    """gqa_train(use_kernels=True) == the dense path, values and grads, with
+    grouped KV heads (kv_groups > 1) and a non-block-multiple sequence."""
+    from repro.configs.base import AttentionConfig
+    from repro.models.attention import gqa_train, init_attention
+
+    cfg = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16,
+                          window=window)
+    d_model, B, S = 32, 2, 48
+    params = init_attention(KEY, d_model, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, S, d_model))
+
+    out_k = gqa_train(params, x, cfg, use_kernels=True)
+    out_d = gqa_train(params, x, cfg, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d),
+                               rtol=2e-3, atol=2e-4)
+
+    def loss(fn_kernels):
+        return lambda p, x: jnp.sum(
+            gqa_train(p, x, cfg, use_kernels=fn_kernels) ** 2
+        )
+
+    gk = jax.grad(loss(True), argnums=(0, 1))(params, x)
+    gd = jax.grad(loss(False), argnums=(0, 1))(params, x)
+    flat_k, _ = jax.tree_util.tree_flatten_with_path(gk)
+    flat_d, _ = jax.tree_util.tree_flatten_with_path(gd)
+    for (path, a), (_, b) in zip(flat_k, flat_d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4,
+                                   err_msg=jax.tree_util.keystr(path))
 
 
 def test_kernel_backed_rotation_matches_reference_path():

@@ -1,0 +1,180 @@
+"""The bf16_compute precision policy: the PrecisionPolicy layer itself, the
+engine's policy resolution, and — mirroring test_analysis's seeded mutations —
+the BF16_COMPUTE_POLICY analyzer check against the REAL kernel-backed bf16
+step jaxpr: it must pass on the healthy trace and FAIL (non-vacuously) when
+the compute cast is deleted or bf16 leaks into optimizer state."""
+import json
+import os
+import subprocess
+import sys
+
+from repro.configs.base import (
+    PRECISION_POLICIES,
+    ModelConfig,
+    PrecisionPolicy,
+)
+
+# ---------------------------------------------------------------------------
+# the policy layer (pure config rewriting, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_precision_policy_registry_and_apply():
+    assert set(PRECISION_POLICIES) == {"f32", "bf16"}
+    f32, bf16 = PRECISION_POLICIES["f32"], PRECISION_POLICIES["bf16"]
+    assert f32.name == "f32" and bf16.name == "bf16_compute"
+
+    cfg = ModelConfig()
+    out = bf16.apply(cfg)
+    # bf16 activations/matmuls, f32 masters, f32 vocab head — the contract
+    # BF16_COMPUTE_POLICY enforces on the traced step
+    assert out.dtype == "bfloat16"
+    assert out.param_dtype == "float32"
+    assert out.logits_fp32 is True
+    # f32 policy is the identity on a default config
+    back = f32.apply(out)
+    assert back.dtype == "float32" and back.param_dtype == "float32"
+
+
+def test_precision_policy_is_declarative():
+    # the policy only selects dtypes; it must not touch unrelated knobs
+    cfg = ModelConfig(num_layers=7, d_model=40, use_kernels=True)
+    out = PRECISION_POLICIES["bf16"].apply(cfg)
+    assert (out.num_layers, out.d_model, out.use_kernels) == (7, 40, True)
+    custom = PrecisionPolicy(name="x", dtype="bfloat16",
+                             param_dtype="bfloat16", logits_fp32=False)
+    out = custom.apply(cfg)
+    assert out.param_dtype == "bfloat16" and out.logits_fp32 is False
+
+
+# ---------------------------------------------------------------------------
+# engine resolution + analyzer mutations on the real bf16 kernel step
+# (subprocess: needs a 2-device stage mesh)
+# ---------------------------------------------------------------------------
+
+BF16_MUTATION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, "src")
+import json, tempfile
+import jax, jax.numpy as jnp
+from repro.configs.base import (ModelConfig, AttentionConfig, BlockSpec,
+                                OptimizerConfig, PRECISION_POLICIES)
+from repro.engine.spmd import SpmdEngine, stack_stage_params
+import repro.engine.schedules as schedules
+from repro.launch.topology import Topology
+from repro.models import init_model
+from repro.analysis import (BF16_COMPUTE_POLICY, check_dtype_policy,
+                            check_no_dot_outside_cond, check_pallas_in_scan,
+                            check_stash_bound)
+
+cfg = ModelConfig(num_layers=2, d_model=16, d_ff=24, vocab_size=96,
+                  max_seq_len=32,
+                  attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8),
+                  pattern=(BlockSpec("attn","dense"),), scan_layers=False)
+cfg = PRECISION_POLICIES["bf16"].apply(cfg).replace(use_kernels=True)
+K, M, S, V = 2, 2, 8, 96
+topo = Topology(stages=K, data=1)
+mesh = topo.make_mesh()
+shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+stacked_s, shared_s = jax.eval_shape(lambda p: stack_stage_params(p, cfg, K), shapes)
+
+def jaxpr_for(schedule, model_cfg=None, stacked=None, shared=None):
+    gf = schedules.make_schedule_grad(model_cfg if model_cfg is not None
+                                      else cfg, mesh, K, M, schedule=schedule)
+    tok = jax.ShapeDtypeStruct((M, 1, S), jnp.int32)
+    return jax.make_jaxpr(gf)(stacked if stacked is not None else stacked_s,
+                              shared if shared is not None else shared_s,
+                              {"tokens": tok, "labels": tok})
+
+def run_checks(jx, schedule):
+    # fill-drain computes the head after the drain (no in-scan vocab dot to
+    # gate), so the gating requirement applies to 1f1b only — same contract
+    # as SCHEDULE_INVARIANTS in the matrix runner
+    out = {
+        "dtype": check_dtype_policy(jx, BF16_COMPUTE_POLICY).to_json(),
+        "kernels": check_pallas_in_scan(jx, min_calls=3).to_json(),
+        "vocab": check_no_dot_outside_cond(
+            jx, V, require_gated=(schedule == "1f1b")).to_json(),
+    }
+    if schedule == "1f1b":
+        out["stash"] = check_stash_bound(jx, K, (1, S, cfg.d_model)).to_json()
+    return out
+
+res = {"baseline_" + s: run_checks(jaxpr_for(s), s)
+       for s in ("fill_drain", "1f1b")}
+
+# mutation A: the precision policy was never applied — the run claims bf16
+# but the traced step computes purely in f32, so no bf16 op remains anywhere
+# and require_present=("bfloat16",) must flag the policy as vacuous
+res["no_cast"] = run_checks(
+    jaxpr_for("fill_drain", model_cfg=cfg.replace(dtype="float32")),
+    "fill_drain")
+
+# mutation B: bf16 leaks into the parameter masters / optimizer state
+bf16_leaf = lambda a: jax.ShapeDtypeStruct(
+    a.shape, jnp.bfloat16 if a.dtype == jnp.float32 else a.dtype)
+res["bf16_state"] = run_checks(
+    jaxpr_for("fill_drain", stacked=jax.tree.map(bf16_leaf, stacked_s),
+              shared=jax.tree.map(bf16_leaf, shared_s)),
+    "fill_drain")
+
+# engine-level resolution: the same policy by name, surfaced in ckpt meta
+engine = SpmdEngine(cfg.replace(dtype="float32"),
+                    OptimizerConfig(name="adam", learning_rate=1e-3,
+                                    total_steps=4, schedule="constant"),
+                    num_stages=K, num_microbatches=M, async_grads=False,
+                    topology=topo, use_kernels=True, precision="bf16")
+state = engine.init_state(key=jax.random.PRNGKey(0))
+with tempfile.TemporaryDirectory() as d:
+    engine.save_checkpoint(d, state, step=0)
+    meta = json.load(open(os.path.join(d, "manifest.json")))["meta"]
+res["engine"] = {
+    "precision": engine.precision,
+    "cfg_dtype": engine.cfg.dtype,
+    "cfg_param_dtype": engine.cfg.param_dtype,
+    "meta_precision": meta.get("precision"),
+}
+print(json.dumps(res))
+"""
+
+
+def test_bf16_policy_mutations_flip_exactly_the_dtype_check():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", BF16_MUTATION_SCRIPT],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+
+    # healthy bf16 kernel step: every check green on BOTH schedules, with the
+    # flash fwd+bwd pallas_calls actually inside the scanned tick body
+    for sched in ("fill_drain", "1f1b"):
+        base = res["baseline_" + sched]
+        for name, check in base.items():
+            assert check["passed"], (sched, name, check)
+        assert base["kernels"]["data"]["in_scan"] >= 3, base["kernels"]
+
+    # deleting the compute cast flips ONLY the dtype check (vacuity clause)
+    mut = res["no_cast"]
+    assert not mut["dtype"]["passed"], mut
+    assert "nowhere" in mut["dtype"]["detail"], mut["dtype"]
+    assert mut["kernels"]["passed"] and mut["vocab"]["passed"], mut
+
+    # bf16 optimizer-state/master leaves flip ONLY the dtype check
+    # (state-dtype clause), not the structural ones
+    mut = res["bf16_state"]
+    assert not mut["dtype"]["passed"], mut
+    assert "state dtype" in mut["dtype"]["detail"], mut["dtype"]
+    assert mut["kernels"]["passed"] and mut["vocab"]["passed"], mut
+
+    # engine resolves the string policy and stamps it into checkpoint meta
+    eng = res["engine"]
+    assert eng["precision"] == "bf16_compute", eng
+    assert eng["cfg_dtype"] == "bfloat16", eng
+    assert eng["cfg_param_dtype"] == "float32", eng
+    assert eng["meta_precision"] == "bf16_compute", eng
