@@ -25,10 +25,10 @@ ALLOCATIONS = (
 )
 
 SPMD_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(stages)d"
 import sys
 sys.path.insert(0, "src")
+from repro.launch.devices import ensure_host_devices
+ensure_host_devices(%(stages)d)
 import json, time
 import jax
 from repro.configs.base import ModelConfig, AttentionConfig, BlockSpec, OptimizerConfig

@@ -7,13 +7,10 @@ discipline as the dry-run entry points.
 import os
 import sys
 
-if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    from repro.analysis.runner import required_devices
+from repro.analysis.runner import required_devices
+from repro.launch.devices import ensure_host_devices
 
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={required_devices()}"
-    ).strip()
+ensure_host_devices(required_devices())
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 from repro.analysis.runner import main  # noqa: E402

@@ -26,13 +26,19 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 STAGE_AXIS_NAME = "stage"
+
+_SHARD_FILE_RE = re.compile(
+    r"^arrays-\d{8}-shard(\d{5})-of-\d{5}(?:-g\d+)?\.npz$"
+)
+_SHARD_TMP_RE = re.compile(r"^\.arrays\.shard(\d{5})\.tmp\.npz$")
 
 
 def _spec(tree: Any, prefix: str = "") -> Any:
@@ -76,21 +82,36 @@ def save_checkpoint(path: str, tree: Any, step: int = 0, meta: Dict | None = Non
     _gc_array_files(path, keep={arrays_name})
 
 
-def _gc_array_files(path: str, keep: set) -> None:
+def _gc_array_files(
+    path: str, keep: set, owned_shards: Optional[Set[int]] = None
+) -> None:
     """Drop array files superseded by a just-committed manifest (both the
     gathered and the sharded naming schemes), plus temp files stranded by an
-    interrupted earlier save."""
+    interrupted earlier save.
+
+    ``owned_shards`` restricts a multi-controller process to collecting only
+    the shard files (and shard temp files) it owns — processes never race on
+    each other's files; the manifest-writing process is the one that may
+    additionally collect gathered-format leftovers (callers pass
+    ``owned_shards=None`` for the single-controller everything-is-mine case).
+    """
     for name in os.listdir(path):
         if name in keep:
             continue
-        stale = name == "arrays.npz" or (
-            name.startswith("arrays-") and name.endswith(".npz")
-        ) or (name.startswith(".arrays") and name.endswith(".tmp.npz"))
-        if stale:
-            try:
-                os.remove(os.path.join(path, name))
-            except OSError:  # pragma: no cover — another writer raced us
-                pass
+        m = _SHARD_FILE_RE.match(name) or _SHARD_TMP_RE.match(name)
+        if m is not None:
+            if owned_shards is not None and int(m.group(1)) not in owned_shards:
+                continue
+        else:
+            gathered_stale = name == "arrays.npz" or (
+                name.startswith("arrays-") and name.endswith(".npz")
+            ) or (name.startswith(".arrays") and name.endswith(".tmp.npz"))
+            if not gathered_stale or owned_shards is not None and 0 not in owned_shards:
+                continue
+        try:
+            os.remove(os.path.join(path, name))
+        except OSError:  # pragma: no cover — another writer raced us
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +153,76 @@ def _shard_file_name(step: int, shard: int, num_shards: int, gen: int = 0) -> st
     return f"arrays-{step:08d}-shard{shard:05d}-of-{num_shards:05d}{suffix}.npz"
 
 
+def _is_partially_addressable(leaf: Any) -> bool:
+    """True for a multi-controller global array this process only holds a
+    slab of (numpy arrays and single-controller jax.Arrays are fully
+    addressable and slice directly)."""
+    return isinstance(leaf, jax.Array) and not leaf.is_fully_addressable
+
+
+def _np_replicated(leaf: Any) -> np.ndarray:
+    """Full value of a leaf with no shard axis."""
+    if _is_partially_addressable(leaf):
+        if not leaf.is_fully_replicated:
+            raise ValueError(
+                f"leaf of shape {leaf.shape} has no recorded shard axis but "
+                f"is not replicated (sharding {leaf.sharding}); it cannot be "
+                f"checkpointed from one process"
+            )
+        return np.asarray(leaf.addressable_shards[0].data)
+    return np.asarray(leaf)
+
+
+def _np_shard_slice(leaf: Any, ax: int, s: int, num_shards: int) -> np.ndarray:
+    """Slice ``s`` of ``num_shards`` along ``ax`` — assembled from LOCAL
+    addressable shards for multi-controller global arrays (slicing the
+    global array would lower a cross-process program; checkpointing must
+    never communicate)."""
+    width = leaf.shape[ax] // num_shards
+    lo, hi = s * width, (s + 1) * width
+    if not _is_partially_addressable(leaf):
+        sl = [slice(None)] * leaf.ndim
+        sl[ax] = slice(lo, hi)
+        # slicing the (fully addressable) jax.Array pulls only this piece
+        return np.asarray(leaf[tuple(sl)])
+    pieces: Dict[Tuple[int, int], Any] = {}
+    for sh in leaf.addressable_shards:
+        idx = sh.index
+        a = idx[ax].start or 0
+        b = leaf.shape[ax] if idx[ax].stop is None else idx[ax].stop
+        if a >= hi or b <= lo:
+            continue
+        if a < lo or b > hi:
+            raise ValueError(
+                f"device shard [{a}:{b}] straddles checkpoint shard "
+                f"[{lo}:{hi}] of axis {ax} (shape {leaf.shape}); the live "
+                f"sharding must tile the {num_shards} checkpoint shards"
+            )
+        for d, ix in enumerate(idx):
+            full = (0, leaf.shape[d])
+            got = (ix.start or 0, leaf.shape[d] if ix.stop is None else ix.stop)
+            if d != ax and got != full:
+                raise ValueError(
+                    f"leaf sharded along axis {d} besides the shard axis "
+                    f"{ax} (sharding {leaf.sharding}); not a stage-sharded "
+                    f"checkpoint layout"
+                )
+        pieces.setdefault((a, b), sh.data)  # replicas across pods dedupe
+    cursor, ordered = lo, []
+    for (a, b), data in sorted(pieces.items()):
+        if a != cursor:
+            break
+        ordered.append(np.asarray(data))
+        cursor = b
+    if cursor != hi:
+        raise ValueError(
+            f"process does not address checkpoint shard {s} of axis {ax} "
+            f"(covered up to {cursor} of [{lo}:{hi}]); shard ownership and "
+            f"the live sharding disagree"
+        )
+    return ordered[0] if len(ordered) == 1 else np.concatenate(ordered, axis=ax)
+
+
 def save_sharded_checkpoint(
     path: str,
     tree: Any,
@@ -140,6 +231,9 @@ def save_sharded_checkpoint(
     meta: Dict | None = None,
     shard_axes: Optional[Sequence[Optional[int]]] = None,
     axis_name: str = STAGE_AXIS_NAME,
+    owned_shards: Optional[Sequence[int]] = None,
+    write_manifest: bool = True,
+    barrier: Optional[Callable[[str], None]] = None,
 ) -> None:
     """Per-stage-shard checkpoint: no gather-to-host of the sharded state.
 
@@ -154,6 +248,20 @@ def save_sharded_checkpoint(
     ``shard_axes`` overrides the per-leaf axis detection (ints or None,
     ``tree_flatten`` order); by default axes are read from each leaf's
     `NamedSharding` via `stage_shard_axes`.
+
+    **Multi-controller contract.** Every process calls this at the same
+    step with its own ``owned_shards`` (a partition of ``range(num_shards)``
+    across processes — `Topology.shard_owners`), exactly one process passes
+    ``write_manifest=True``, and ``barrier`` is the cross-process rendezvous
+    (`repro.launch.distributed.barrier`). Each process then writes ONLY its
+    own shard files, sliced from its locally addressable device shards — no
+    cross-process traffic. Three barriers order the phases: (1) after the
+    generation scan, so every process names the same file set before anyone
+    writes; (2) after the shard writes, so the manifest — the single commit
+    point — never names a file that isn't fully on disk; (3) after the
+    manifest commit, so no process garbage-collects files the manifest
+    still needs. The defaults (`owned_shards=None` = all shards, no
+    barrier) are the unchanged single-controller path.
     """
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -171,12 +279,14 @@ def save_sharded_checkpoint(
                 f"leaf {i}: axis {ax} of shape {leaf.shape} is not divisible "
                 f"into {num_shards} shards"
             )
+    owned = set(range(num_shards)) if owned_shards is None else set(owned_shards)
 
     # never overwrite committed files in place: if this step was saved before
     # (re-run into an old dir, run_loop's final-step double save), pick fresh
     # names so a crash mid-save cannot leave the old manifest pointing at a
     # mixed old/new shard set; the superseded files are GC'd after the
-    # manifest commit
+    # manifest commit. Every process scans BEFORE anyone writes (barrier), so
+    # all pick the same generation from the same directory state.
     gen = 0
     while any(
         os.path.exists(os.path.join(path, _shard_file_name(step, s, num_shards, gen)))
@@ -186,37 +296,43 @@ def save_sharded_checkpoint(
     shard_files = [
         _shard_file_name(step, s, num_shards, gen) for s in range(num_shards)
     ]
-    for s in range(num_shards):
+    if barrier is not None:
+        barrier(f"ckpt-{step}-g{gen}-named")
+    for s in sorted(owned):
         arrays = {}
         for i, (leaf, ax) in enumerate(zip(leaves, shard_axes)):
             if ax is None:
                 if s == 0:
-                    arrays[f"leaf_{i}"] = np.asarray(leaf)
+                    arrays[f"leaf_{i}"] = _np_replicated(leaf)
             else:
-                width = leaf.shape[ax] // num_shards
-                sl = [slice(None)] * leaf.ndim
-                sl[ax] = slice(s * width, (s + 1) * width)
-                # slicing the global jax.Array pulls only this shard's piece
-                arrays[f"leaf_{i}"] = np.asarray(leaf[tuple(sl)])
+                arrays[f"leaf_{i}"] = _np_shard_slice(leaf, ax, s, num_shards)
         tmp = os.path.join(path, f".arrays.shard{s:05d}.tmp.npz")
         np.savez(tmp, **arrays)
         os.replace(tmp, os.path.join(path, shard_files[s]))
+    if barrier is not None:
+        barrier(f"ckpt-{step}-g{gen}-shards")
 
-    manifest = {
-        "format": "sharded",
-        "spec": _spec(tree),
-        "num_leaves": len(leaves),
-        "num_shards": num_shards,
-        "shard_axes": shard_axes,
-        "shard_files": shard_files,
-        "step": step,
-        "meta": meta or {},
-    }
-    manifest_tmp = os.path.join(path, ".manifest.tmp.json")
-    with open(manifest_tmp, "w") as f:
-        json.dump(manifest, f)
-    os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
-    _gc_array_files(path, keep=set(shard_files))
+    if write_manifest:
+        manifest = {
+            "format": "sharded",
+            "spec": _spec(tree),
+            "num_leaves": len(leaves),
+            "num_shards": num_shards,
+            "shard_axes": shard_axes,
+            "shard_files": shard_files,
+            "step": step,
+            "meta": meta or {},
+        }
+        manifest_tmp = os.path.join(path, ".manifest.tmp.json")
+        with open(manifest_tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
+    if barrier is not None:
+        barrier(f"ckpt-{step}-g{gen}-commit")
+    _gc_array_files(
+        path, keep=set(shard_files),
+        owned_shards=None if owned_shards is None else owned,
+    )
 
 
 def _load_sharded_leaves(path: str, manifest: Dict) -> list:

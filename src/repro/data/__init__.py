@@ -3,6 +3,7 @@ from repro.data.synthetic import (
     batches,
     eval_batches,
     host_assembled_batches,
+    process_local_batches,
     sharded_batches,
 )
 
@@ -11,5 +12,6 @@ __all__ = [
     "batches",
     "eval_batches",
     "host_assembled_batches",
+    "process_local_batches",
     "sharded_batches",
 ]

@@ -155,6 +155,58 @@ def host_assembled_batches(cfg, batch_size, seq_len, num_hosts, seed=0):
         }
 
 
+def process_local_batches(
+    cfg,
+    batch_size,
+    seq_len,
+    num_microbatches,
+    data_shards,
+    shard_lo,
+    shard_hi,
+    seed=0,
+):
+    """Process-local slice of the global MICROBATCHED stream (the
+    multi-controller loading path).
+
+    The pipeline consumes the global batch as ``(B, S) -> (M, B//M, S)``
+    with the microbatch rows sharded over the (pod-major) data axes. A
+    process owning data shards ``[shard_lo, shard_hi)`` of ``data_shards``
+    (`Topology.process_data_shards`) must therefore supply, for EVERY
+    microbatch, its row-shard slice — rows that are interleaved, not
+    contiguous, in the flat ``(B, S)`` stream. This iterator yields exactly
+    that addressable portion, shaped ``(M, (hi-lo) * B//M//shards, S)``, for
+    `jax.make_array_from_process_local_data`; stacking the per-shard slices
+    over a partition of ``range(data_shards)`` reproduces the single-process
+    global reshape bit-for-bit, so runs are reproducible across process
+    counts (and elastic resumes keep consuming the identical stream).
+
+    Like `sharded_batches`, each process samples the full global batch and
+    keeps its slice (the Markov sampler's rng couples rows); a real corpus
+    loader would seek to the interleaved offsets within one global shuffle
+    order instead.
+    """
+    M = num_microbatches
+    assert batch_size % M == 0, (
+        f"global batch {batch_size} must divide into {M} microbatches"
+    )
+    mb = batch_size // M
+    assert mb % data_shards == 0, (
+        f"microbatch size {mb} must divide over {data_shards} data shards"
+    )
+    assert 0 <= shard_lo < shard_hi <= data_shards, (
+        f"shard range [{shard_lo}, {shard_hi}) outside [0, {data_shards})"
+    )
+    w = mb // data_shards
+    for batch in batches(cfg, batch_size, seq_len, seed=seed):
+        out = {}
+        for k, v in batch.items():
+            v = np.asarray(v)
+            rest = v.shape[1:]
+            local = v.reshape(M, data_shards, w, *rest)[:, shard_lo:shard_hi]
+            out[k] = local.reshape(M, (shard_hi - shard_lo) * w, *rest)
+        yield out
+
+
 def eval_batches(cfg, batch_size, seq_len, n, seed=10_000):
     it = batches(cfg, batch_size, seq_len, seed)
     return [next(it) for _ in range(n)]

@@ -84,11 +84,16 @@ def _write_metrics(
     cfg: LoopConfig, losses: List[float], steps_done: int, start_step: int
 ) -> None:
     os.makedirs(os.path.dirname(cfg.out_path) or ".", exist_ok=True)
-    with open(cfg.out_path, "w") as f:  # incremental: survives interruption
+    # atomic replace: a process killed mid-write (pod loss) must never leave
+    # a truncated JSON — a later resume reads this file to keep the full
+    # absolute-step series
+    tmp = cfg.out_path + ".tmp"
+    with open(tmp, "w") as f:  # incremental: survives interruption
         # losses[i] is the loss at absolute step start_step + i; on resume the
         # caller merges the pre-resume series so this covers the whole run
         json.dump({**cfg.out_meta, "steps_done": steps_done,
                    "start_step": start_step, "losses": losses}, f)
+    os.replace(tmp, cfg.out_path)
 
 
 def run_loop(
@@ -99,32 +104,47 @@ def run_loop(
     start_step: int = 0,
     key: Any = None,
 ) -> Tuple[EngineState, List[float]]:
-    """Run `cfg.steps` engine steps (from `start_step` when resuming)."""
+    """Run `cfg.steps` engine steps (from `start_step` when resuming).
+
+    Multi-controller runs drive this loop on EVERY process in lock-step:
+    all processes step the engine and save checkpoints (each flushes its
+    own shard files), but stdout logging and the metrics JSON are
+    process-0-only — non-main processes must never race on the metrics
+    file the main process owns.
+    """
+    from repro.launch.distributed import is_main
+
+    main = is_main()
     if state is None:
         state = engine.init_state(key=key)
-    prefix, prefix_start = _read_metrics_prefix(cfg, start_step)
+    prefix, prefix_start = (
+        _read_metrics_prefix(cfg, start_step) if main else ([], start_step)
+    )
     losses: List[float] = []
     t0 = time.time()
     for t in range(start_step, cfg.steps):
         batch = next(data_iter)
         state, loss, metrics = engine.step(state, batch, t)
         losses.append(float(loss))
-        if cfg.log_every and t % cfg.log_every == 0:
+        if main and cfg.log_every and t % cfg.log_every == 0:
             extra = f"  ce {float(metrics['ce']):.4f}" if "ce" in metrics else ""
             print(f"step {t:5d}  loss {losses[-1]:.4f}{extra}"
                   f"  ({time.time() - t0:.1f}s)")
         wrote_ckpt = cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0
         if wrote_ckpt:
             # the engine owns the on-disk format (SpmdEngine writes one
-            # arrays file per stage shard instead of gathering to host)
+            # arrays file per stage shard instead of gathering to host, and
+            # in multi-process runs each process writes only its own shards)
             engine.save_checkpoint(cfg.ckpt_dir, state, step=t + 1)
         # metrics are flushed at every checkpoint too, so the metrics file
         # never lags a checkpoint a later resume will restart from (a lagging
         # file would forfeit its pre-resume series at merge time)
-        if cfg.out_path and (wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0):
+        if main and cfg.out_path and (
+            wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0
+        ):
             _write_metrics(cfg, prefix + losses, t + 1, prefix_start)
     if cfg.ckpt_dir:
         engine.save_checkpoint(cfg.ckpt_dir, state, step=cfg.steps)
-    if cfg.out_path:
+    if main and cfg.out_path:
         _write_metrics(cfg, prefix + losses, cfg.steps, prefix_start)
     return state, losses

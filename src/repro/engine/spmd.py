@@ -212,6 +212,14 @@ class SpmdEngine(PipelineEngine):
                 f"but the engine was asked for {K}"
             )
         self.topology = topology
+        # multi-controller: the device grid must be process-slab ordered for
+        # the data-shard and checkpoint-ownership maps to be meaningful
+        from repro.launch.distributed import assert_process_slabs, process_count
+
+        self._num_processes = process_count()
+        if self._num_processes > 1:
+            assert_process_slabs()
+            topology.local_device_count(self._num_processes)  # divisibility
         self.mesh = mesh if mesh is not None else topology.make_mesh()
         self.grad_fn = make_pipeline_grad(
             cfg, self.mesh, K, M, schedule=schedule,
@@ -262,7 +270,17 @@ class SpmdEngine(PipelineEngine):
         )
 
     def _shape_batch(self, batch: Dict) -> Dict:
-        """(B, S) host batch -> (M, B//M, S) microbatched pipeline input."""
+        """(B, S) host batch -> (M, B//M, S) microbatched pipeline input.
+
+        Multi-controller runs feed the PROCESS-LOCAL slice instead
+        (`data.synthetic.process_local_batches`: already microbatched, only
+        this process's data-shard rows); the global array is assembled from
+        every process's addressable rows via
+        `jax.make_array_from_process_local_data` — no process ever holds the
+        full batch.
+        """
+        if self._num_processes > 1:
+            return self._assemble_process_batch(batch)
         tokens = batch["tokens"]
         if tokens.ndim == 3:  # already microbatched
             mb = tokens.shape[1]
@@ -281,6 +299,35 @@ class SpmdEngine(PipelineEngine):
             f"of topology {self.topology.describe()}"
         )
         return batch
+
+    def _assemble_process_batch(self, batch: Dict) -> Dict:
+        """Process-local (M, mb_local, ...) rows -> global jax.Array sharded
+        over the topology's data axes."""
+        import numpy as np
+        from jax.sharding import NamedSharding
+
+        from repro.launch.distributed import process_index
+
+        topo = self.topology
+        lo, hi = topo.process_data_shards(self._num_processes, process_index())
+        sharding = NamedSharding(self.mesh, topo.batch_spec())
+        out = {}
+        for k, v in batch.items():
+            v = np.asarray(v)
+            assert v.ndim >= 2 and v.shape[0] == self.num_microbatches, (
+                f"multi-process batches must arrive microbatched "
+                f"(process_local_batches); got {k} of shape {v.shape}"
+            )
+            mb_local = v.shape[1]
+            assert mb_local % (hi - lo) == 0, (
+                f"local microbatch rows {mb_local} do not cover data shards "
+                f"[{lo}, {hi}) of topology {topo.describe()}"
+            )
+            mb = mb_local // (hi - lo) * topo.data_shards
+            out[k] = jax.make_array_from_process_local_data(
+                sharding, v, (v.shape[0], mb, *v.shape[2:])
+            )
+        return out
 
     def step(
         self, state: EngineState, batch: Dict, t: int
@@ -344,12 +391,30 @@ class SpmdEngine(PipelineEngine):
         stage axis); leaves the runtime replicates — shared params, scalar
         counters, anything saved before the first compiled step — go to
         shard 0. No gather-to-host of the stage-sharded state.
+
+        Multi-controller: every process calls this at the same step; each
+        writes only the shards `Topology.shard_owners` assigns it (sliced
+        from locally addressable device shards), the main process alone
+        commits the manifest, and the distributed barrier orders
+        name-scan -> shard writes -> manifest -> GC across processes.
         """
         from repro.checkpoint import save_sharded_checkpoint
+        from repro.launch.distributed import barrier, is_main, process_index
 
+        kw = {}
+        if self._num_processes > 1:
+            owners = self.topology.shard_owners(self._num_processes)
+            me = process_index()
+            kw = dict(
+                owned_shards=[s for s, p in enumerate(owners) if p == me],
+                write_manifest=is_main(),
+                barrier=barrier,
+            )
         save_sharded_checkpoint(
             path, self.checkpoint_tree(state), num_shards=self.num_stages,
             step=step,
             meta={"topology": self.topology.describe(),
-                  "precision": self.precision, **(meta or {})},
+                  "precision": self.precision,
+                  "num_processes": self._num_processes, **(meta or {})},
+            **kw,
         )

@@ -1,9 +1,36 @@
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh, mesh_shape_dict
-from repro.launch.topology import Topology
+"""Launch layer: device bootstrap, process identity, topology, meshes.
 
-__all__ = [
-    "Topology",
-    "make_production_mesh",
-    "make_smoke_mesh",
-    "mesh_shape_dict",
-]
+Attribute access is lazy (PEP 562): `repro.launch.mesh` imports jax at
+module scope, but `launch.devices` / `launch.distributed` must be importable
+BEFORE the first jax import (they set/read env that jax reads once at
+backend initialisation). A plain eager ``from .mesh import ...`` here would
+drag jax in the moment any launch submodule is touched.
+"""
+_EXPORTS = {
+    "Topology": "repro.launch.topology",
+    "make_production_mesh": "repro.launch.mesh",
+    "make_smoke_mesh": "repro.launch.mesh",
+    "mesh_shape_dict": "repro.launch.mesh",
+    "ensure_host_devices": "repro.launch.devices",
+    "ProcessGrid": "repro.launch.distributed",
+    "distributed_env": "repro.launch.distributed",
+    "init_distributed": "repro.launch.distributed",
+    "process_count": "repro.launch.distributed",
+    "process_index": "repro.launch.distributed",
+    "is_main": "repro.launch.distributed",
+    "barrier": "repro.launch.distributed",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

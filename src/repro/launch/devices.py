@@ -1,0 +1,62 @@
+"""Shared pre-`import jax` device-count bootstrap.
+
+Every CPU entry point used to clobber ``XLA_FLAGS`` with its own
+``--xla_force_host_platform_device_count=N`` assignment (train, the
+dry-runs, the analysis matrix, the benchmark subprocess templates) — losing
+any flags the user had exported and forcing host devices even on machines
+whose accelerators already provide them. `ensure_host_devices` is the one
+place that decision lives now:
+
+* it APPENDS to ``XLA_FLAGS`` instead of replacing it, so user content
+  (``--xla_dump_to=...`` etc.) survives;
+* it defers to a pre-existing ``xla_force_host_platform_device_count``
+  setting — whoever set it first (user or an outer launcher) wins;
+* it no-ops when ``JAX_PLATFORMS`` / ``JAX_PLATFORM_NAME`` names a real
+  accelerator backend (tpu/gpu/cuda/rocm): those platforms bring their own
+  devices and the flag only affects the CPU platform anyway;
+* in a multi-controller launch (`repro.launch.distributed`), callers pass
+  the PER-PROCESS device count — each process only needs to force its local
+  share of the global topology.
+
+It contains no jax imports and MUST be called before anything imports jax:
+the flag is read once, at backend initialisation.
+"""
+from __future__ import annotations
+
+import os
+from typing import MutableMapping, Optional
+
+FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+# platforms that provide their own devices; forcing host devices would at
+# best be ignored and at worst mask a mis-set topology
+ACCELERATOR_PLATFORMS = {"tpu", "gpu", "cuda", "rocm"}
+
+
+def _accelerator_selected(env: MutableMapping[str, str]) -> bool:
+    platforms = env.get("JAX_PLATFORMS") or env.get("JAX_PLATFORM_NAME") or ""
+    names = {p.strip().lower() for p in platforms.split(",") if p.strip()}
+    return bool(names & ACCELERATOR_PLATFORMS)
+
+
+def ensure_host_devices(
+    count: int, env: Optional[MutableMapping[str, str]] = None
+) -> bool:
+    """Guarantee ``count`` visible devices on CPU-only runs.
+
+    Appends ``--xla_force_host_platform_device_count=count`` to ``XLA_FLAGS``
+    in ``env`` (default ``os.environ``) unless the flag is already present
+    (first setter wins) or an accelerator platform is selected. Returns True
+    iff the flag was appended. Call BEFORE the first jax import.
+    """
+    if env is None:
+        env = os.environ
+    if count <= 0:
+        raise ValueError(f"device count must be positive, got {count}")
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return False
+    if _accelerator_selected(env):
+        return False
+    env["XLA_FLAGS"] = f"{flags} {FORCE_FLAG}={count}".strip()
+    return True

@@ -1,0 +1,172 @@
+"""Multi-controller (`jax.distributed`) initialisation and process identity.
+
+One process per "host": `launch/spawn.py` (or a cluster scheduler) starts N
+copies of the same SPMD program, each owning a slab of the global device
+grid. This module is the single place that knows how a process finds out
+
+* whether it is part of a multi-controller run at all (the ``REPRO_*`` env
+  contract spawn sets, or explicit arguments),
+* its coordinates (`process_index` / `process_count` / `is_main`),
+* how to rendezvous (`barrier`).
+
+Everything else stays SPMD-agnostic: `run_loop` gates logging/metrics on
+`is_main()`, `SpmdEngine` asks `process_count()` whether batches arrive as
+process-local shards, and the sharded checkpointer takes `barrier` as a
+plain callable. All jax imports are lazy so importing this module never
+touches jax device state (the same discipline as `launch/mesh.py`), and
+every helper degrades to the single-process answer when `jax.distributed`
+was never initialised — single-controller behavior is bit-for-bit unchanged.
+
+CPU multi-process runs need the gloo collectives backend
+(``jax_cpu_collectives_implementation=gloo``); `init_distributed` sets it
+before `jax.distributed.initialize`, which must happen before the first
+backend use.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import MutableMapping, Optional
+
+# env contract between launch/spawn.py and the worker processes
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+
+@dataclass(frozen=True)
+class ProcessGrid:
+    """Resolved multi-controller coordinates of THIS process."""
+
+    num_processes: int = 1
+    process_index: int = 0
+    coordinator: Optional[str] = None
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError(f"num_processes must be >= 1, got {self}")
+        if not 0 <= self.process_index < self.num_processes:
+            raise ValueError(f"process_index out of range: {self}")
+
+    @property
+    def distributed(self) -> bool:
+        return self.num_processes > 1
+
+    def describe(self) -> str:
+        return f"process {self.process_index}/{self.num_processes}"
+
+
+def distributed_env(
+    env: Optional[MutableMapping[str, str]] = None,
+) -> Optional[ProcessGrid]:
+    """The `ProcessGrid` a launcher requested via env, or None outside one.
+
+    All three variables must be present — a partial contract is a launcher
+    bug, reported loudly instead of silently running single-process.
+    """
+    if env is None:
+        env = os.environ
+    keys = (ENV_COORDINATOR, ENV_NUM_PROCESSES, ENV_PROCESS_ID)
+    present = [k for k in keys if k in env]
+    if not present:
+        return None
+    if len(present) != len(keys):
+        missing = sorted(set(keys) - set(present))
+        raise RuntimeError(
+            f"partial multi-controller env: {present} set but {missing} "
+            f"missing (launch/spawn.py sets all three)"
+        )
+    return ProcessGrid(
+        num_processes=int(env[ENV_NUM_PROCESSES]),
+        process_index=int(env[ENV_PROCESS_ID]),
+        coordinator=env[ENV_COORDINATOR],
+    )
+
+
+def init_distributed(grid: Optional[ProcessGrid] = None) -> ProcessGrid:
+    """Initialise `jax.distributed` for `grid` (default: the env contract).
+
+    No-op (returns the single-process grid) when no multi-controller launch
+    was requested. Must run before the first jax backend use; safe to call
+    exactly once per process.
+    """
+    if grid is None:
+        grid = distributed_env()
+    if grid is None or not grid.distributed:
+        return grid or ProcessGrid()
+    if grid.coordinator is None:
+        raise ValueError(f"multi-process grid needs a coordinator: {grid}")
+    import jax
+
+    # CPU cross-process collectives go through gloo; the flag must be set
+    # before the CPU client is created (older jax without the option simply
+    # doesn't support multi-process CPU — let initialize surface that)
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):  # pragma: no cover — newer/older jax
+        pass
+    jax.distributed.initialize(
+        coordinator_address=grid.coordinator,
+        num_processes=grid.num_processes,
+        process_id=grid.process_index,
+    )
+    return grid
+
+
+def process_count() -> int:
+    """Global process count (1 when jax.distributed was never initialised)."""
+    try:
+        import jax
+
+        return jax.process_count()
+    except Exception:  # pragma: no cover — jax absent/uninitialisable
+        return 1
+
+
+def process_index() -> int:
+    try:
+        import jax
+
+        return jax.process_index()
+    except Exception:  # pragma: no cover
+        return 0
+
+
+def is_main() -> bool:
+    """True on the process that owns logging, metrics files and manifests."""
+    return process_index() == 0
+
+
+def barrier(name: str) -> None:
+    """Block until every process reaches the same named barrier.
+
+    Single-process: returns immediately. Multi-process: a tiny collective
+    over all global devices (`multihost_utils.sync_global_devices`), which
+    also cross-checks that every process is at the SAME barrier — two
+    processes saving different steps fail fast instead of corrupting state.
+    """
+    if process_count() == 1:
+        return
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(name)
+
+
+def assert_process_slabs() -> None:
+    """Verify `jax.devices()` orders each process's devices as one contiguous
+    slab (process-major) — the layout `Topology.process_data_shards` and the
+    checkpoint shard-ownership map assume. Holds for every standard backend;
+    a permuted order means those maps would silently mis-assign rows."""
+    import jax
+
+    n, p = len(jax.devices()), process_count()
+    if p == 1:
+        return
+    assert n % p == 0, f"{n} devices not divisible over {p} processes"
+    per = n // p
+    for i, d in enumerate(jax.devices()):
+        if d.process_index != i // per:
+            raise RuntimeError(
+                f"jax.devices() is not process-slab ordered: device {i} "
+                f"belongs to process {d.process_index}, expected {i // per}"
+            )

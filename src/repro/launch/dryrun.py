@@ -1,13 +1,14 @@
-import os
+from repro.launch.devices import ensure_host_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+ensure_host_devices(512)
 
 """Multi-pod dry-run: AOT lower + compile every (architecture x input shape)
 on the production meshes, proving the distribution config is coherent without
 hardware, and extract the roofline terms from the compiled artifact.
 
 MUST be imported before any other jax-touching module sets device state —
-hence the XLA_FLAGS assignment above everything else.
+hence the `ensure_host_devices` call above everything else (it appends to
+XLA_FLAGS without clobbering user flags and defers to accelerators).
 
 Usage:
     python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k
@@ -16,6 +17,7 @@ Usage:
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
+import os  # noqa: E402
 import time  # noqa: E402
 from functools import partial  # noqa: E402
 from typing import Dict, Optional, Tuple  # noqa: E402

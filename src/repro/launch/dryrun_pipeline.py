@@ -1,6 +1,6 @@
-import os
+from repro.launch.devices import ensure_host_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+ensure_host_devices(512)
 
 """Dry-run of the shard_map PIPELINE runtime (DESIGN.md §4): the paper's own
 architecture, layers split over a 16-way `stage` mesh axis with ppermute

@@ -32,6 +32,28 @@ def make_mesh_compat(shape: Tuple[int, ...], axis_names: Sequence[str]) -> Mesh:
         return jax.make_mesh(tuple(shape), tuple(axis_names))
 
 
+def make_process_mesh(shape: Tuple[int, ...], axis_names: Sequence[str]) -> Mesh:
+    """Row-major mesh over the raw global device list (multi-controller path).
+
+    `jax.make_mesh` may permute devices for ICI locality; multi-process
+    data loading and checkpoint shard ownership assume the device grid is
+    exactly `jax.devices()` reshaped row-major, so process slabs line up
+    with contiguous (pod, stage, data) slabs. Built through the raw `Mesh`
+    constructor to pin that order.
+    """
+    import numpy as np
+
+    devices = np.array(jax.devices())
+    n = 1
+    for s in shape:
+        n *= s
+    if devices.size != n:
+        raise ValueError(
+            f"{devices.size} global devices do not fill mesh shape {shape}"
+        )
+    return Mesh(devices.reshape(tuple(shape)), tuple(axis_names))
+
+
 def use_mesh(mesh: Mesh):
     """Context manager installing `mesh` as the ambient mesh.
 

@@ -116,11 +116,98 @@ class Topology:
         )
         return tuple(tuple(int(x) for x in row) for row in grouped)
 
+    # -- process grid (multi-controller) -------------------------------------
+
+    def local_device_count(self, num_processes: int) -> int:
+        """Devices each process contributes: the global grid split into
+        equal process-major slabs."""
+        if num_processes < 1 or self.num_devices % num_processes != 0:
+            raise ValueError(
+                f"{self.num_devices} devices of topology {self.describe()} "
+                f"do not split over {num_processes} processes"
+            )
+        return self.num_devices // num_processes
+
+    def _process_coords(self, num_processes: int, process_index: int):
+        """(pod, stage, data)-style coordinate rows of one process's slab of
+        the row-major global device grid."""
+        import numpy as np
+
+        per = self.local_device_count(num_processes)
+        if not 0 <= process_index < num_processes:
+            raise ValueError(
+                f"process_index {process_index} out of range for "
+                f"{num_processes} processes"
+            )
+        flat = np.arange(process_index * per, (process_index + 1) * per)
+        return np.stack(np.unravel_index(flat, self.shape), axis=1)
+
+    def process_data_shards(
+        self, num_processes: int, process_index: int
+    ) -> Tuple[int, int]:
+        """Half-open range ``[lo, hi)`` of global data-shard indices (pod-
+        major, `data_shards` total) whose batch rows this process must
+        supply to `jax.make_array_from_process_local_data`.
+
+        The range is the union of the (pod, data) coordinates of the
+        process's device slab — contiguous whenever process boundaries
+        don't cut a stage's data extent unevenly (guaranteed when the
+        per-process device count and the data extent divide one another,
+        the only layouts the launcher produces). Processes that only hold
+        stage replicas of the same rows get overlapping ranges — each
+        supplies its addressable copy, exactly what the assembly API wants.
+        """
+        coords = self._process_coords(num_processes, process_index)
+        if self.pods == 1:
+            rows = coords[:, 1]  # (stage, data) -> data coordinate
+        else:
+            rows = coords[:, 0] * self.data + coords[:, 2]
+        uniq = sorted(set(int(r) for r in rows))
+        lo, hi = uniq[0], uniq[-1] + 1
+        if uniq != list(range(lo, hi)):
+            raise ValueError(
+                f"process {process_index}/{num_processes} of topology "
+                f"{self.describe()} owns non-contiguous data shards {uniq}; "
+                f"choose a process count whose slab size divides (or is a "
+                f"multiple of) the data extent"
+            )
+        return lo, hi
+
+    def shard_owners(self, num_processes: int) -> Tuple[int, ...]:
+        """Which process writes checkpoint shard (= pipeline stage) ``s``.
+
+        Candidates are the processes whose device slab touches stage ``s``
+        (they address that slice of every stage-sharded leaf); ownership
+        round-robins over them so pod-replicated layouts spread the write
+        load instead of piling every shard on process 0. Exactly one owner
+        per shard — the disjoint-write invariant the multi-process
+        checkpointer relies on.
+        """
+        owners = []
+        self.local_device_count(num_processes)  # validate divisibility
+        stage_pos = 0 if self.pods == 1 else 1
+        by_stage: dict = {}
+        for p in range(num_processes):
+            for c in self._process_coords(num_processes, p):
+                by_stage.setdefault(int(c[stage_pos]), []).append(p)
+        for s in range(self.stages):
+            cands = sorted(set(by_stage[s]))
+            owners.append(cands[s % len(cands)])
+        return tuple(owners)
+
     # -- mesh + specs --------------------------------------------------------
 
     def make_mesh(self) -> Mesh:
-        from repro.launch.mesh import make_mesh_compat
+        from repro.launch.mesh import make_mesh_compat, make_process_mesh
 
+        import jax
+
+        if jax.process_count() > 1:
+            # multi-controller: the device grid must be row-major so process
+            # slabs align with the (pod, stage, data) slabs the data loader
+            # and checkpoint shard-ownership maps assume (jax.make_mesh may
+            # permute devices for ICI locality)
+            return make_process_mesh(self.shape, self.axis_names)
         return make_mesh_compat(self.shape, self.axis_names)
 
     def stage_spec(self, ndim: int) -> P:
@@ -187,3 +274,17 @@ class Topology:
                 )
             data = device_count // (pods * stages)
         return cls(stages=stages, data=data, pods=pods)
+
+    @classmethod
+    def from_process_grid(
+        cls, stages: int, num_processes: int, local_device_count: int,
+        pods: int = 1, data: int = 0,
+    ) -> "Topology":
+        """Multi-controller constructor: the global grid is the union of
+        ``num_processes`` slabs of ``local_device_count`` devices each;
+        ``data == 0`` fills the data axis from that total (mirroring
+        `from_device_count` for the single-controller path)."""
+        return cls.from_device_count(
+            stages, pods=pods, data=data,
+            device_count=num_processes * local_device_count,
+        )

@@ -19,6 +19,17 @@ Two backends behind the same loop (`repro.engine`):
     machines with a different device count, re-run with
     ``JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
+    The spmd backend also runs TRUE multi-controller: start N copies of this
+    driver (``repro.launch.spawn`` does it on one machine) with either the
+    ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+    env contract or ``--coordinator/--num-processes/--process-id``. Each
+    process brings ``num_devices/N`` local devices, loads only its data
+    shards (`data.synthetic.process_local_batches`), writes only its own
+    checkpoint shard files, and process 0 alone logs, writes metrics JSON
+    and commits checkpoint manifests. Resuming on a different process count
+    or smaller `Topology` (elastic resume after losing a pod) goes through
+    the same format-agnostic checkpoint loader.
+
     PYTHONPATH=src python -m repro.launch.train \\
         --arch paper_95m --stages 8 --optimizer basis_rotation \\
         --steps 300 --batch 8 --seq 256 --lr 1e-3 [--backend spmd]
@@ -30,7 +41,6 @@ from __future__ import annotations
 
 import argparse
 import math
-import os
 
 
 def parse_args(argv=None):
@@ -82,6 +92,16 @@ def parse_args(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=200)
     ap.add_argument("--out", default=None, help="write the loss curve as JSON")
+    ap.add_argument("--coordinator", default=None,
+                    help="spmd backend: jax.distributed coordinator "
+                         "host:port (default: the REPRO_COORDINATOR env "
+                         "contract launch/spawn.py sets)")
+    ap.add_argument("--num-processes", type=int, default=0,
+                    help="spmd backend: multi-controller process count "
+                         "(default 0 = read the REPRO_* env contract; 1 = "
+                         "force single-process)")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="spmd backend: this process's index in the grid")
     return ap.parse_args(argv)
 
 
@@ -97,25 +117,57 @@ def main(argv=None):
             "--pods / --data-par describe the spmd device topology; the sim "
             "backend is a single-program simulation (use --backend spmd)"
         )
+    # devices/distributed import no jax — safe before XLA_FLAGS is final
+    from repro.launch.devices import ensure_host_devices
+    from repro.launch.distributed import (
+        ProcessGrid,
+        distributed_env,
+        init_distributed,
+        is_main,
+    )
+
+    grid = ProcessGrid()
     if args.backend == "spmd":
         if args.weight_prediction or args.no_stash:
             raise SystemExit(
                 "--weight-prediction / --no-stash are sim-backend modes; "
                 "the spmd backend imposes weight-stashing staleness physically"
             )
-        # the spmd backend needs pods*stages*data devices; on CPU, force host
-        # devices BEFORE any jax device-state initialisation
+        if args.num_processes:
+            grid = ProcessGrid(num_processes=args.num_processes,
+                               process_index=args.process_id,
+                               coordinator=args.coordinator)
+        else:
+            grid = distributed_env() or ProcessGrid()
+        # the spmd backend needs pods*stages*data devices globally; on CPU,
+        # force (this process's share of) them BEFORE jax initialises its
+        # backend — in a multi-controller run every process contributes an
+        # equal slab of the global grid
         n_dev = args.pods * args.stages * max(args.data_par, 1)
-        flags = os.environ.get("XLA_FLAGS", "")
-        if "xla_force_host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = (
-                flags + f" --xla_force_host_platform_device_count={n_dev}"
-            ).strip()
+        if n_dev % grid.num_processes:
+            raise SystemExit(
+                f"{grid.num_processes} processes do not split the "
+                f"{n_dev}-device (pods={args.pods}, stages={args.stages}, "
+                f"data={args.data_par}) topology evenly"
+            )
+        ensure_host_devices(n_dev // grid.num_processes)
+    elif args.num_processes > 1 or args.coordinator:
+        raise SystemExit(
+            "--coordinator / --num-processes are spmd-backend options; the "
+            "sim backend is a single-program simulation (use --backend spmd)"
+        )
 
     import jax
 
+    if grid.distributed:
+        # rendezvous before any backend use: jax.devices() below must
+        # already see the merged global device grid
+        init_distributed(grid)
+
+    main_proc = is_main()
+
     from repro.configs import OptimizerConfig, get_config
-    from repro.data import batches, host_assembled_batches
+    from repro.data import batches, host_assembled_batches, process_local_batches
     from repro.engine import (
         LoopConfig,
         SimEngine,
@@ -151,8 +203,9 @@ def main(argv=None):
             layers = math.lcm(len(cfg.pattern), args.stages)
             while layers < cfg.num_layers:
                 layers += math.lcm(len(cfg.pattern), args.stages)
-            print(f"smoke: padding {cfg.num_layers} layers -> {layers} "
-                  f"to divide {args.stages} stages")
+            if main_proc:
+                print(f"smoke: padding {cfg.num_layers} layers -> {layers} "
+                      f"to divide {args.stages} stages")
             cfg = cfg.replace(num_layers=layers)
         else:
             raise SystemExit(
@@ -175,11 +228,12 @@ def main(argv=None):
             # only if it wasn't already set with a different count)
             want = args.pods * args.stages * max(args.data_par, 1)
             raise SystemExit(
-                f"spmd backend: {n} devices do not form a "
-                f"(pods={args.pods}, stages={args.stages}, "
+                f"spmd backend: {n} global devices ({grid.describe()}) do "
+                f"not form a (pods={args.pods}, stages={args.stages}, "
                 f"data={args.data_par}) topology; re-run with "
                 f"JAX_PLATFORMS=cpu XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={want}"
+                f"--xla_force_host_platform_device_count="
+                f"{want // grid.num_processes} on each process"
             )
         M = args.microbatches or args.stages
         shards = topology.data_shards
@@ -193,9 +247,12 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
     topo_str = topology.describe() if topology is not None else None
-    print(f"arch={cfg.name} params={param_count(params):,} stages={args.stages} "
-          f"optimizer={args.optimizer} backend={args.backend}"
-          + (f" topology={topo_str}" if topo_str else ""))
+    if main_proc:
+        print(f"arch={cfg.name} params={param_count(params):,} "
+              f"stages={args.stages} optimizer={args.optimizer} "
+              f"backend={args.backend}"
+              + (f" topology={topo_str}" if topo_str else "")
+              + (f" {grid.describe()}" if grid.distributed else ""))
 
     ocfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
@@ -228,7 +285,23 @@ def main(argv=None):
         )
 
     state = engine.init_state(params=params)
-    if topology is not None and topology.pods > 1:
+    if grid.distributed:
+        # true multi-controller loading: each process yields only the
+        # microbatch row shards its device slab addresses; the engine
+        # assembles them into the global batch via
+        # jax.make_array_from_process_local_data. Stacking the per-process
+        # slices reproduces batches() bit-for-bit, so process count never
+        # changes the data stream (and elastic resumes continue it exactly).
+        lo, hi = topology.process_data_shards(
+            grid.num_processes, grid.process_index
+        )
+        data = process_local_batches(
+            cfg, args.batch, args.seq,
+            num_microbatches=args.microbatches or args.stages,
+            data_shards=topology.data_shards, shard_lo=lo, shard_hi=hi,
+            seed=args.seed,
+        )
+    elif topology is not None and topology.pods > 1:
         # host-sharded loading, one emulated host per pod: each pod walks its
         # slice of the same seeded global stream (sharded_batches partitions
         # batches() bit-for-bit, so the topology never changes the data)
@@ -241,7 +314,7 @@ def main(argv=None):
     # resumed run continues the exact uninterrupted stream (the assembled
     # sharded iterator advances every host shard in lock-step)
     state, start_step = resume_if_present(engine, state, args.ckpt_dir, data)
-    if start_step:
+    if start_step and main_proc:
         print(f"resumed from {args.ckpt_dir} at step {start_step}")
 
     loop_cfg = LoopConfig(
@@ -255,7 +328,7 @@ def main(argv=None):
                   "use_kernels": args.use_kernels},
     )
     _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
-    if losses:
+    if losses and main_proc:
         print(f"final loss {losses[-1]:.4f}")
 
 

@@ -1,0 +1,91 @@
+"""Property-based tests for the sharded data loaders (hypothesis).
+
+Skipped wholesale when hypothesis is not installed (the CI image does not
+ship it); the deterministic parametrized versions of the same invariants run
+unconditionally in test_infra.py. Kept in a separate module so the skip
+never hides unrelated data tests.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.data import batches, process_local_batches, sharded_batches  # noqa: E402
+
+CFG = ModelConfig(vocab_size=64)
+B, S = 8, 16
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@st.composite
+def host_splits(draw):
+    num_hosts = draw(st.sampled_from(divisors(B)))
+    host_id = draw(st.integers(0, num_hosts - 1))
+    prefix = draw(st.integers(0, 3))
+    return num_hosts, host_id, prefix
+
+
+@settings(max_examples=15, deadline=None)
+@given(host_splits())
+def test_sharded_batches_partition_and_resume(split):
+    """Any (num_hosts, host_id) dividing the batch: the host slice is the
+    corresponding rows of the global stream, and fast-forwarding a fresh
+    iterator `prefix` steps (the resume path) lands on the same batch the
+    uninterrupted host stream yields."""
+    num_hosts, host_id, prefix = split
+    local = B // num_hosts
+    lo, hi = host_id * local, (host_id + 1) * local
+
+    ref = batches(CFG, B, S, seed=9)
+    it = sharded_batches(CFG, B, S, num_hosts, host_id, seed=9)
+    seen = []
+    for _ in range(prefix + 1):
+        want, got = next(ref), next(it)
+        seen.append(got)
+        for key in want:
+            np.testing.assert_array_equal(
+                np.asarray(got[key]), np.asarray(want[key])[lo:hi]
+            )
+    fresh = sharded_batches(CFG, B, S, num_hosts, host_id, seed=9)
+    for _ in range(prefix):
+        next(fresh)
+    resumed = next(fresh)
+    for key in resumed:
+        np.testing.assert_array_equal(
+            np.asarray(resumed[key]), np.asarray(seen[prefix][key])
+        )
+
+
+@st.composite
+def shard_ranges(draw):
+    M = draw(st.sampled_from([1, 2, 4]))
+    data_shards = draw(st.sampled_from(divisors(B // M)))
+    lo = draw(st.integers(0, data_shards - 1))
+    hi = draw(st.integers(lo + 1, data_shards))
+    return M, data_shards, lo, hi
+
+
+@settings(max_examples=15, deadline=None)
+@given(shard_ranges())
+def test_process_local_batches_slice_of_global_reshape(r):
+    """Any contiguous [lo, hi) shard range: the process-local stream equals
+    the matching slice of the global (M, shards, w, S) reshape bit-for-bit."""
+    M, data_shards, lo, hi = r
+    w = B // M // data_shards
+    ref = batches(CFG, B, S, seed=2)
+    it = process_local_batches(CFG, B, S, num_microbatches=M,
+                               data_shards=data_shards, shard_lo=lo,
+                               shard_hi=hi, seed=2)
+    for _ in range(2):
+        want, got = next(ref), next(it)
+        for key in want:
+            glob = np.asarray(want[key]).reshape(M, data_shards, w, -1)
+            np.testing.assert_array_equal(
+                np.asarray(got[key]).reshape(M, hi - lo, w, -1),
+                glob[:, lo:hi],
+            )

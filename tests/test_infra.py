@@ -152,6 +152,80 @@ def test_sharded_batches_single_host_stream_unchanged():
         np.testing.assert_array_equal(np.asarray(x["labels"]), np.asarray(y["labels"]))
 
 
+@pytest.mark.parametrize("num_hosts", [1, 2, 4, 8])
+def test_sharded_batches_any_divisor_split_partitions_stream(num_hosts):
+    """Property (deterministic sweep; the hypothesis version lives in
+    test_data_properties.py): for EVERY host count dividing the batch,
+    (a) per-host slices concatenate bit-for-bit to the global `batches()`
+    stream at every step, and (b) a fresh host iterator fast-forwarded k
+    steps — the resume path — matches the uninterrupted host stream."""
+    from repro.data import sharded_batches
+
+    cfg = ModelConfig(vocab_size=64)
+    B, S, steps = 8, 16, 3
+    ref = batches(cfg, B, S, seed=11)
+    its = [sharded_batches(cfg, B, S, num_hosts, h, seed=11)
+           for h in range(num_hosts)]
+    stream = [[next(it) for it in its] for _ in range(steps)]
+    for t in range(steps):
+        want = next(ref)
+        for key in want:
+            cat = np.concatenate(
+                [np.asarray(s[key]) for s in stream[t]], axis=0
+            )
+            np.testing.assert_array_equal(cat, np.asarray(want[key]))
+    for h in (0, num_hosts - 1):
+        for k in (0, steps - 1):
+            fresh = sharded_batches(cfg, B, S, num_hosts, h, seed=11)
+            for _ in range(k):
+                next(fresh)
+            got = next(fresh)
+            for key in got:
+                np.testing.assert_array_equal(
+                    np.asarray(got[key]), np.asarray(stream[k][h][key])
+                )
+
+
+@pytest.mark.parametrize("data_shards,splits", [
+    (1, [(0, 1)]),
+    (2, [(0, 1), (1, 2)]),
+    (2, [(0, 2)]),
+    (4, [(0, 2), (2, 4)]),
+    (4, [(0, 1), (1, 2), (2, 3), (3, 4)]),
+])
+def test_process_local_batches_partition_microbatched_stream(
+    data_shards, splits
+):
+    """The multi-controller loader must reproduce the global MICROBATCHED
+    array: stacking each process's `[lo, hi)` row-shard slice along the
+    shard axis equals ``batches()`` reshaped (M, shards, w, S) — the
+    invariant that makes loss curves independent of process count and lets
+    elastic resumes continue the identical stream."""
+    from repro.data import process_local_batches
+
+    cfg = ModelConfig(vocab_size=64)
+    B, S, M = 8, 16, 2
+    w = B // M // data_shards
+    ref = batches(cfg, B, S, seed=4)
+    its = [
+        process_local_batches(cfg, B, S, num_microbatches=M,
+                              data_shards=data_shards, shard_lo=lo,
+                              shard_hi=hi, seed=4)
+        for lo, hi in splits
+    ]
+    for _ in range(3):
+        want = next(ref)
+        parts = [next(it) for it in its]
+        for key in want:
+            glob = np.asarray(want[key]).reshape(M, data_shards, w, -1)
+            got = np.concatenate(
+                [np.asarray(p[key]).reshape(M, hi - lo, w, -1)
+                 for p, (lo, hi) in zip(parts, splits)],
+                axis=1,
+            )
+            np.testing.assert_array_equal(got, glob)
+
+
 def test_data_modalities():
     audio = ModelConfig(vocab_size=32, num_codebooks=4)
     b = next(batches(audio, 2, 8))
