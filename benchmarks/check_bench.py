@@ -1,0 +1,78 @@
+"""Bench-regression gate: compare a fresh BENCH_*.json against the
+committed baseline and fail on large per-row slowdowns.
+
+    python -m benchmarks.check_bench BENCH_kernels_ci.json \
+        --baseline benchmarks/BENCH_kernels_smoke.json --max-slowdown 2.5
+
+Rows are matched by name; rows present on only one side are reported but
+never fail the gate (renames and new rows must not break CI — the committed
+baseline is refreshed in the same PR that renames a row). The threshold is
+deliberately loose (2.5x): shared CI runners are noisy and `_time` already
+reports a median, so the gate exists to catch order-of-magnitude
+regressions (an interpret-mode kernel accidentally enabled, a host sync on
+the step path, a donation regression re-introducing per-step copies), not
+5% drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def _rows_by_name(payload: Dict) -> Dict[str, float]:
+    return {
+        r["name"]: float(r["us_per_call"])
+        for r in payload.get("rows", [])
+        if "us_per_call" in r
+    }
+
+
+def compare(new: Dict, baseline: Dict, max_slowdown: float):
+    """Returns (failures, report_lines); failures is a list of row names."""
+    new_rows, base_rows = _rows_by_name(new), _rows_by_name(baseline)
+    common = sorted(set(new_rows) & set(base_rows))
+    failures, lines = [], []
+    for name in common:
+        b, n = base_rows[name], new_rows[name]
+        ratio = n / b if b > 0 else float("inf")
+        flag = ""
+        if ratio > max_slowdown:
+            failures.append(name)
+            flag = f"  <-- FAIL (> {max_slowdown:.1f}x)"
+        lines.append(f"  {name}: {b:.0f}us -> {n:.0f}us ({ratio:.2f}x){flag}")
+    for name in sorted(set(base_rows) - set(new_rows)):
+        lines.append(f"  {name}: removed (baseline-only, not gated)")
+    for name in sorted(set(new_rows) - set(base_rows)):
+        lines.append(f"  {name}: new row (no baseline, not gated)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh BENCH_*.json from this run")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_kernels_smoke.json")
+    ap.add_argument("--max-slowdown", type=float, default=2.5,
+                    help="fail when new/baseline exceeds this per row")
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, lines = compare(new, baseline, args.max_slowdown)
+    print(f"bench gate: {args.new} vs {args.baseline} "
+          f"(max slowdown {args.max_slowdown:.1f}x)")
+    print("\n".join(lines))
+    if failures:
+        print(f"FAIL: {len(failures)} row(s) regressed beyond "
+              f"{args.max_slowdown:.1f}x: {', '.join(failures)}")
+        return 1
+    print(f"OK: {len(lines)} row(s) checked, none beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ tracked against it; the committed baseline lives at
 from __future__ import annotations
 
 import json
+import statistics
 import sys
 import time
 
@@ -30,14 +31,43 @@ import jax
 import jax.numpy as jnp
 
 
-def _time(fn, *args, iters: int = 3):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return 1e6 * (time.perf_counter() - t0) / iters
+def _time(fn, *args, iters: int = 10, warmup: int = 2):
+    """Median microseconds per call.
+
+    The first call compiles; the next ``warmup`` calls absorb allocator and
+    cache effects; then every timed call is synchronised individually with
+    `block_until_ready` and the MEDIAN over >= 10 samples is reported — a
+    mean over 3 unsynchronised calls (the old scheme) let one GC pause or
+    compile-cache miss swing the committed baseline by 2x.
+    """
+    for _ in range(max(warmup, 1) + 1):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return 1e6 * statistics.median(samples)
+
+
+def _time_carry(fn, carry, iters: int = 10, warmup: int = 2):
+    """`_time` for self-feeding steps: `fn(carry) -> carry`.
+
+    A DONATED train step consumes its input buffers, so timing it by
+    replaying the same arguments (the old scheme) would die on the second
+    call; threading the output back as the next input is also the honest
+    measurement — it is exactly what `run_loop` does.
+    """
+    for _ in range(max(warmup, 1) + 1):
+        carry = fn(carry)
+        jax.block_until_ready(carry)
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        carry = fn(carry)
+        jax.block_until_ready(carry)
+        samples.append(time.perf_counter() - t0)
+    return 1e6 * statistics.median(samples)
 
 
 def optimizer_rows(K: int, per: int, dim: int):
@@ -91,41 +121,64 @@ def adam_scale_rows(shape):
 
 
 def attention_rows(B: int, H: int, S: int, dh: int, window=None):
-    """Flash kernel vs XLA reference: forward and `jax.grad` backward."""
+    """Flash kernel (autotuned AND default-block plans) vs XLA reference:
+    forward and `jax.grad` backward.
+
+    The tuned plan comes straight from `repro.tune` (`write=False` — the
+    benchmark never mutates the persistent cache): the measured backend on
+    TPU, the analytical cost model off-TPU. The default plan is the
+    pre-tuner hardcoded 128-block tiling, kept as a row so the BENCH
+    trajectory records the tuning win at every shape.
+    """
+    from repro import tune
     from repro.kernels import ops, ref
 
+    plan = tune.tune_flash(S, dh, batch_heads=B * H, write=False)
     shape = (B, H, S, dh)
     q = jax.random.normal(jax.random.PRNGKey(0), shape)
     k = jax.random.normal(jax.random.PRNGKey(1), shape)
     v = jax.random.normal(jax.random.PRNGKey(2), shape)
     do = jax.random.normal(jax.random.PRNGKey(3), shape)
 
-    kfwd = jax.jit(lambda q, k, v: ops.attention(q, k, v, window=window))
+    ktuned = jax.jit(lambda q, k, v: ops.attention(
+        q, k, v, window=window,
+        block_q=plan["block_q"], block_k=plan["block_k"],
+    ))
+    kdefault = jax.jit(lambda q, k, v: ops.attention(
+        q, k, v, window=window, block_q=128, block_k=128,
+    ))
     rfwd = jax.jit(
         lambda q, k, v: ref.flash_attention_ref(q, k, v, window=window)
     )
-    err_f = float(jnp.max(jnp.abs(kfwd(q, k, v) - rfwd(q, k, v))))
+    err_f = float(jnp.max(jnp.abs(ktuned(q, k, v) - rfwd(q, k, v))))
 
     def _gradfn(fwd):
         return jax.jit(jax.grad(
             lambda q, k, v: jnp.sum(fwd(q, k, v) * do), argnums=(0, 1, 2)
         ))
 
-    kbwd, rbwd = _gradfn(kfwd), _gradfn(rfwd)
+    kbwd_t, kbwd_d, rbwd = _gradfn(ktuned), _gradfn(kdefault), _gradfn(rfwd)
     err_b = max(
         float(jnp.max(jnp.abs(a - b)))
-        for a, b in zip(kbwd(q, k, v), rbwd(q, k, v))
+        for a, b in zip(kbwd_t(q, k, v), rbwd(q, k, v))
     )
     dims = f"B={B};H={H};S={S};dh={dh}"
+    blocks = f"bq={plan['block_q']};bk={plan['block_k']}"
     return [
-        {"name": "kernels_vs_xla/attention_fwd_kernel",
-         "us_per_call": _time(kfwd, q, k, v),
-         "derived": f"{dims};maxerr={err_f:.1e}"},
+        {"name": "kernels_vs_xla/attention_fwd_kernel_tuned",
+         "us_per_call": _time(ktuned, q, k, v),
+         "derived": f"{dims};{blocks};maxerr={err_f:.1e}"},
+        {"name": "kernels_vs_xla/attention_fwd_kernel_default",
+         "us_per_call": _time(kdefault, q, k, v),
+         "derived": f"{dims};bq=128;bk=128"},
         {"name": "kernels_vs_xla/attention_fwd_xla",
          "us_per_call": _time(rfwd, q, k, v), "derived": dims},
-        {"name": "kernels_vs_xla/attention_bwd_kernel",
-         "us_per_call": _time(kbwd, q, k, v),
-         "derived": f"{dims};maxerr={err_b:.1e}"},
+        {"name": "kernels_vs_xla/attention_bwd_kernel_tuned",
+         "us_per_call": _time(kbwd_t, q, k, v),
+         "derived": f"{dims};{blocks};maxerr={err_b:.1e}"},
+        {"name": "kernels_vs_xla/attention_bwd_kernel_default",
+         "us_per_call": _time(kbwd_d, q, k, v),
+         "derived": f"{dims};bq=128;bk=128"},
         {"name": "kernels_vs_xla/attention_bwd_xla",
          "us_per_call": _time(rbwd, q, k, v), "derived": dims},
     ]
@@ -141,7 +194,9 @@ _STEP_CONFIGS = (
 )
 
 
-def _step_engine(num_layers: int, use_kernels: bool, precision: str):
+def _step_engine(
+    num_layers: int, use_kernels: bool, precision: str, donate="auto"
+):
     from repro.configs.base import (
         AttentionConfig, BlockSpec, ModelConfig, OptimizerConfig,
     )
@@ -159,35 +214,71 @@ def _step_engine(num_layers: int, use_kernels: bool, precision: str):
     return SpmdEngine(
         cfg, ocfg, num_stages=1, num_microbatches=1,
         topology=Topology(stages=1, data=1),
-        use_kernels=use_kernels, precision=precision,
+        use_kernels=use_kernels, precision=precision, donate=donate,
     )
+
+
+def _time_full_step(engine, batch: int, seq: int):
+    """Median step time with the state threaded through like `run_loop`
+    does (mandatory for the donated engine; fair for both)."""
+    state = engine.init_state(key=jax.random.PRNGKey(0))
+    tok = jax.random.randint(
+        jax.random.PRNGKey(1), (1, batch, seq), 0, engine.cfg.vocab_size
+    )
+    batch_d = {"tokens": tok, "labels": tok}
+    stacked, shared = state.params
+
+    def step(carry):
+        stacked, shared, opt_state = carry
+        out = engine._jit_step(stacked, shared, opt_state, batch_d,
+                               jnp.int32(0))
+        return out[:3]
+
+    return _time_carry(step, (stacked, shared, state.opt_state))
 
 
 def full_step_rows(num_layers: int, batch: int, seq: int):
     """One complete train step (grads + clip + Adam) per kernel/precision
-    configuration, plus the roofline row for the kernel+bf16 step."""
+    configuration with the platform-default donation setting, plus the
+    roofline row for the kernel+bf16 step.
+
+    On accelerators (where `SpmdEngine(donate="auto")` resolves ON) each
+    config additionally gets an explicit `_donate`/`_nodonate` pair so the
+    BENCH trajectory records the per-step copy cost donation removes. The
+    pair is NOT emitted on CPU: there donation is default-off because
+    in-place aliasing serializes the XLA:CPU thunk schedule (~10-20% slower
+    step, DESIGN.md §11 known limits), and a committed slower-by-design row
+    would only add noise to the regression gate."""
+    import jax
+
+    donation_default_on = jax.default_backend() in ("tpu", "gpu")
     rows = []
     for label, use_kernels, precision in _STEP_CONFIGS:
         engine = _step_engine(num_layers, use_kernels, precision)
-        state = engine.init_state(key=jax.random.PRNGKey(0))
-        tok = jax.random.randint(
-            jax.random.PRNGKey(1), (1, batch, seq), 0, engine.cfg.vocab_size
-        )
-        batch_d = {"tokens": tok, "labels": tok}
-        stacked, shared = state.params
-
-        def step(stacked, shared, opt_state, b):
-            return engine._jit_step(stacked, shared, opt_state, b,
-                                    jnp.int32(0))
-
-        us = _time(step, stacked, shared, state.opt_state, batch_d)
+        us = _time_full_step(engine, batch, seq)
         rows.append({
             "name": f"kernels_vs_xla/full_step_{label}",
             "us_per_call": us,
-            "derived": f"layers={num_layers};batch={batch};seq={seq}",
+            "derived": (
+                f"layers={num_layers};batch={batch};seq={seq};"
+                f"donate={int(engine.donate)}"
+            ),
         })
         if label == "kernels_bf16":
             rows.append(roofline_row(engine, batch, seq))
+        if donation_default_on:
+            for donate in (True, False):
+                eng = _step_engine(num_layers, use_kernels, precision,
+                                   donate=donate)
+                suffix = "_donate" if donate else "_nodonate"
+                rows.append({
+                    "name": f"kernels_vs_xla/full_step_{label}{suffix}",
+                    "us_per_call": _time_full_step(eng, batch, seq),
+                    "derived": (
+                        f"layers={num_layers};batch={batch};seq={seq};"
+                        f"donate={int(donate)}"
+                    ),
+                })
     return rows
 
 
@@ -253,7 +344,7 @@ def run(quick: bool = True):
     if quick:
         return (
             optimizer_rows(2, 1, 32) + adam_scale_rows((64, 64))
-            + attention_rows(1, 2, 128, 16, window=32)
+            + attention_rows(1, 2, 256, 16, window=32)
             + full_step_rows(num_layers=2, batch=4, seq=32)
         )
     return (

@@ -278,6 +278,65 @@ def check_collective_axes(
     )
 
 
+# ---------------------------------------------------------------------------
+# Buffer donation (input->output aliasing)
+# ---------------------------------------------------------------------------
+
+# entry-module header entries: `{out_idx}: (param_idx, {}, may-alias)` —
+# jax flattens every donated argument to a scalar-indexed parameter, so the
+# param-side sub-index is always `{}`; `must-alias` appears when XLA pins
+# the alias rather than merely permitting it
+ALIAS_ENTRY_RE = re.compile(
+    r"\{(\d+)(?:,\s*\d+)*\}:\s*\((\d+),\s*\{\},\s*(?:may|must)-alias\)"
+)
+
+
+def parse_input_output_aliases(hlo_text: str) -> Dict[int, int]:
+    """``param index -> output index`` from the compiled module's
+    ``input_output_alias`` header (empty when nothing is donated)."""
+    for line in hlo_text.splitlines():
+        if "input_output_alias={" not in line:
+            continue
+        return {
+            int(param): int(out)
+            for out, param in ALIAS_ENTRY_RE.findall(line)
+        }
+    return {}
+
+
+def check_donation(
+    hlo_text: str,
+    expected_params: Sequence[int],
+    queue_params: Sequence[int] = (),
+    name: str = "donation",
+) -> CheckResult:
+    """Every expected donated parameter is aliased to an output in the
+    compiled HLO — donation can never silently regress to copying.
+
+    ``expected_params`` are the flattened indices of the donated jit args
+    minus the delay-FIFO queue leaves (``queue_params``): XLA legitimately
+    declines to alias the rolled queues (jax lowers them as
+    ``jax.buffer_donor``), so they are reported but not required.
+    """
+    aliased = set(parse_input_output_aliases(hlo_text))
+    missing = [i for i in expected_params if i not in aliased]
+    detail = "" if not missing else (
+        f"{len(missing)}/{len(expected_params)} donated parameters not "
+        f"aliased in the compiled HLO (first: {missing[:8]}); "
+        f"was the step jitted without donate_argnums?"
+    )
+    return CheckResult(
+        name, not missing, detail,
+        {
+            "expected": len(list(expected_params)),
+            "aliased": len(aliased),
+            "missing": missing[:32],
+            "queue_leaves": len(list(queue_params)),
+            "queue_aliased": sum(1 for i in queue_params if i in aliased),
+        },
+    )
+
+
 def check_data_reduction(
     instrs: Sequence[CollectiveInstr],
     topology: Any,

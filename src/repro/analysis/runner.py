@@ -17,8 +17,9 @@ Which checks run where:
 
 * per cell: ``dtype_policy`` on the step jaxpr; ``no_dot_outside_cond`` and
   ``stash_bound`` per the schedule's declared invariants
-  (`engine.schedules.SCHEDULE_INVARIANTS`); ``collective_axes`` and
-  ``data_reduction`` on the compiled step's optimized HLO.
+  (`engine.schedules.SCHEDULE_INVARIANTS`); ``collective_axes``,
+  ``data_reduction`` and ``donation`` (donated buffers input->output
+  aliased) on the compiled step's optimized HLO.
 * per (schedule, topology): ``scan_body_constant_in_microbatches`` on the
   schedule's grad program at two microbatch counts (the optimizer does not
   enter the grad trace, so this is hoisted out of the optimizer axis).
@@ -145,6 +146,7 @@ def audit_cell(
     from repro.analysis.hlo import (
         check_collective_axes,
         check_data_reduction,
+        check_donation,
         parse_collectives,
     )
     from repro.engine.schedules import SCHEDULE_INVARIANTS
@@ -156,6 +158,10 @@ def audit_cell(
     engine = SpmdEngine(
         cfg, _opt_cfg(opt_name), num_stages=_K, num_microbatches=_M,
         async_grads=(sync_mode == "async"), schedule=schedule, topology=topo,
+        # donate=True explicitly (not "auto"): the donation-aliasing check
+        # below must audit the donated compile on every host, including CPU
+        # where "auto" resolves to off for step-time reasons
+        donate=True,
     )
     jx = engine.step_jaxpr(seq_len=_SEQ)
     results = [check_dtype_policy(jx, F32_POLICY)]
@@ -175,6 +181,11 @@ def audit_cell(
         instrs = parse_collectives(hlo)
         results.append(check_collective_axes(instrs, topo))
         results.append(check_data_reduction(instrs, topo))
+        # donated step: every (stacked, shared, opt_state) leaf except the
+        # delay-FIFO queues must be input->output aliased in the compiled
+        # module — a lost donate_argnums can never silently regress
+        expected, queues = engine.donated_leaf_indices()
+        results.append(check_donation(hlo, expected, queues))
     return results
 
 

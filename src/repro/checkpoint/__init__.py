@@ -1,13 +1,19 @@
 from repro.checkpoint.ckpt import (
+    ShardedSnapshot,
     load_checkpoint,
     save_checkpoint,
     save_sharded_checkpoint,
+    snapshot_sharded,
     stage_shard_axes,
+    write_sharded_checkpoint,
 )
 
 __all__ = [
+    "ShardedSnapshot",
     "load_checkpoint",
     "save_checkpoint",
     "save_sharded_checkpoint",
+    "snapshot_sharded",
     "stage_shard_axes",
+    "write_sharded_checkpoint",
 ]

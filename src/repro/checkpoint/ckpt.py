@@ -21,12 +21,20 @@ to a temp name and `os.replace`d into a step-versioned name, and the
 manifest — swapped in LAST — is the single commit point. A crash anywhere
 mid-save leaves the previous manifest pointing at the previous (complete)
 file set.
+
+The sharded save is split into two halves so checkpoints can be written off
+the training thread: `snapshot_sharded` (device -> host numpy slices, needs
+the LIVE leaves' sharding metadata, runs on the loop thread) and
+`write_sharded_checkpoint` (file I/O + the 3-barrier commit, safe on a
+background writer). `save_sharded_checkpoint` is their synchronous
+composition.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -223,49 +231,50 @@ def _np_shard_slice(leaf: Any, ax: int, s: int, num_shards: int) -> np.ndarray:
     return ordered[0] if len(ordered) == 1 else np.concatenate(ordered, axis=ax)
 
 
-def save_sharded_checkpoint(
-    path: str,
+@dataclass
+class ShardedSnapshot:
+    """Host-side image of a sharded checkpoint, decoupled from the live
+    device arrays.
+
+    `snapshot_sharded` builds it EAGERLY on the training thread — slicing
+    each owned shard to host numpy while the leaves' `NamedSharding`
+    metadata is still live (a donated train step deletes/reuses the source
+    buffers as soon as the next step is dispatched, and numpy copies are
+    the only thing a background writer may touch). `write_sharded_checkpoint`
+    then does the file I/O — safe to run on a writer thread after the loop
+    has moved on.
+    """
+
+    spec: Any
+    num_leaves: int
+    num_shards: int
+    shard_axes: List[Optional[int]]
+    # shard id -> {"leaf_i": host array}; only the owned shards are present
+    arrays: Dict[int, Dict[str, np.ndarray]]
+    owned: Set[int]
+
+
+def snapshot_sharded(
     tree: Any,
     num_shards: int,
-    step: int = 0,
-    meta: Dict | None = None,
     shard_axes: Optional[Sequence[Optional[int]]] = None,
     axis_name: str = STAGE_AXIS_NAME,
     owned_shards: Optional[Sequence[int]] = None,
-    write_manifest: bool = True,
-    barrier: Optional[Callable[[str], None]] = None,
-) -> None:
-    """Per-stage-shard checkpoint: no gather-to-host of the sharded state.
+) -> ShardedSnapshot:
+    """Slice `tree` into a host-memory `ShardedSnapshot` (no file I/O).
 
-    Shard file s holds, for every leaf with a shard axis, slice s of
+    Shard s holds, for every leaf with a shard axis, slice s of
     ``num_shards`` along that axis (stage-stacked params/moments slice on
     axis 0, the delay-FIFO queues on their stage axis); shard 0 additionally
-    holds the replicated leaves (shared params, scalar counters). The
-    manifest is written last and names the full file set, so interrupted
-    saves leave the previous checkpoint loadable (`load_checkpoint` serves
-    both this and the gathered format).
-
+    holds the replicated leaves (shared params, scalar counters).
     ``shard_axes`` overrides the per-leaf axis detection (ints or None,
     ``tree_flatten`` order); by default axes are read from each leaf's
-    `NamedSharding` via `stage_shard_axes`.
-
-    **Multi-controller contract.** Every process calls this at the same
-    step with its own ``owned_shards`` (a partition of ``range(num_shards)``
-    across processes — `Topology.shard_owners`), exactly one process passes
-    ``write_manifest=True``, and ``barrier`` is the cross-process rendezvous
-    (`repro.launch.distributed.barrier`). Each process then writes ONLY its
-    own shard files, sliced from its locally addressable device shards — no
-    cross-process traffic. Three barriers order the phases: (1) after the
-    generation scan, so every process names the same file set before anyone
-    writes; (2) after the shard writes, so the manifest — the single commit
-    point — never names a file that isn't fully on disk; (3) after the
-    manifest commit, so no process garbage-collects files the manifest
-    still needs. The defaults (`owned_shards=None` = all shards, no
-    barrier) are the unchanged single-controller path.
+    `NamedSharding` via `stage_shard_axes`. ``owned_shards`` restricts a
+    multi-controller process to slicing only its own shards (from locally
+    addressable device shards — no cross-process traffic).
     """
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-    os.makedirs(path, exist_ok=True)
     leaves = jax.tree_util.tree_leaves(tree)
     if shard_axes is None:
         shard_axes = stage_shard_axes(tree, axis_name, num_shards)
@@ -280,7 +289,55 @@ def save_sharded_checkpoint(
                 f"into {num_shards} shards"
             )
     owned = set(range(num_shards)) if owned_shards is None else set(owned_shards)
+    arrays: Dict[int, Dict[str, np.ndarray]] = {}
+    for s in sorted(owned):
+        shard = {}
+        for i, (leaf, ax) in enumerate(zip(leaves, shard_axes)):
+            if ax is None:
+                if s == 0:
+                    shard[f"leaf_{i}"] = _np_replicated(leaf)
+            else:
+                shard[f"leaf_{i}"] = _np_shard_slice(leaf, ax, s, num_shards)
+        arrays[s] = shard
+    return ShardedSnapshot(
+        spec=_spec(tree), num_leaves=len(leaves), num_shards=num_shards,
+        shard_axes=shard_axes, arrays=arrays, owned=owned,
+    )
 
+
+def write_sharded_checkpoint(
+    path: str,
+    snapshot: ShardedSnapshot,
+    step: int = 0,
+    meta: Dict | None = None,
+    write_manifest: bool = True,
+    barrier: Optional[Callable[[str], None]] = None,
+) -> None:
+    """Commit a `ShardedSnapshot` to disk under the 3-barrier atomic
+    protocol. Pure host-side file I/O — safe on a background writer thread.
+
+    The manifest is written last and names the full file set, so
+    interrupted saves leave the previous checkpoint loadable
+    (`load_checkpoint` serves both this and the gathered format).
+
+    **Multi-controller contract.** Every process calls this at the same
+    step with its own snapshot (owned shards partition
+    ``range(num_shards)`` across processes — `Topology.shard_owners`),
+    exactly one process passes ``write_manifest=True``, and ``barrier`` is
+    the cross-process rendezvous (`repro.launch.distributed.barrier`). Each
+    process writes ONLY its own shard files. Three barriers order the
+    phases: (1) after the generation scan, so every process names the same
+    file set before anyone writes; (2) after the shard writes, so the
+    manifest — the single commit point — never names a file that isn't
+    fully on disk; (3) after the manifest commit, so no process
+    garbage-collects files the manifest still needs. The defaults (all
+    shards owned, no barrier) are the unchanged single-controller path.
+    Asynchronous writers must keep the submission order of checkpoints and
+    run ONE writer per process, so the barrier sequence stays globally
+    ordered (engine.loop's serial writer thread guarantees this).
+    """
+    os.makedirs(path, exist_ok=True)
+    num_shards = snapshot.num_shards
     # never overwrite committed files in place: if this step was saved before
     # (re-run into an old dir, run_loop's final-step double save), pick fresh
     # names so a crash mid-save cannot leave the old manifest pointing at a
@@ -298,16 +355,9 @@ def save_sharded_checkpoint(
     ]
     if barrier is not None:
         barrier(f"ckpt-{step}-g{gen}-named")
-    for s in sorted(owned):
-        arrays = {}
-        for i, (leaf, ax) in enumerate(zip(leaves, shard_axes)):
-            if ax is None:
-                if s == 0:
-                    arrays[f"leaf_{i}"] = _np_replicated(leaf)
-            else:
-                arrays[f"leaf_{i}"] = _np_shard_slice(leaf, ax, s, num_shards)
+    for s in sorted(snapshot.owned):
         tmp = os.path.join(path, f".arrays.shard{s:05d}.tmp.npz")
-        np.savez(tmp, **arrays)
+        np.savez(tmp, **snapshot.arrays[s])
         os.replace(tmp, os.path.join(path, shard_files[s]))
     if barrier is not None:
         barrier(f"ckpt-{step}-g{gen}-shards")
@@ -315,10 +365,10 @@ def save_sharded_checkpoint(
     if write_manifest:
         manifest = {
             "format": "sharded",
-            "spec": _spec(tree),
-            "num_leaves": len(leaves),
+            "spec": snapshot.spec,
+            "num_leaves": snapshot.num_leaves,
             "num_shards": num_shards,
-            "shard_axes": shard_axes,
+            "shard_axes": snapshot.shard_axes,
             "shard_files": shard_files,
             "step": step,
             "meta": meta or {},
@@ -329,9 +379,37 @@ def save_sharded_checkpoint(
         os.replace(manifest_tmp, os.path.join(path, "manifest.json"))
     if barrier is not None:
         barrier(f"ckpt-{step}-g{gen}-commit")
+    all_owned = snapshot.owned == set(range(num_shards))
     _gc_array_files(
         path, keep=set(shard_files),
-        owned_shards=None if owned_shards is None else owned,
+        owned_shards=None if all_owned else snapshot.owned,
+    )
+
+
+def save_sharded_checkpoint(
+    path: str,
+    tree: Any,
+    num_shards: int,
+    step: int = 0,
+    meta: Dict | None = None,
+    shard_axes: Optional[Sequence[Optional[int]]] = None,
+    axis_name: str = STAGE_AXIS_NAME,
+    owned_shards: Optional[Sequence[int]] = None,
+    write_manifest: bool = True,
+    barrier: Optional[Callable[[str], None]] = None,
+) -> None:
+    """Synchronous per-stage-shard checkpoint: `snapshot_sharded` (device ->
+    host slices) immediately followed by `write_sharded_checkpoint` (atomic
+    3-barrier commit) on the calling thread. The async path in engine.loop
+    calls the two halves separately so only the snapshot blocks training.
+    """
+    snapshot = snapshot_sharded(
+        tree, num_shards, shard_axes=shard_axes, axis_name=axis_name,
+        owned_shards=owned_shards,
+    )
+    write_sharded_checkpoint(
+        path, snapshot, step=step, meta=meta,
+        write_manifest=write_manifest, barrier=barrier,
     )
 
 

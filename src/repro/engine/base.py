@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -56,20 +56,45 @@ class PipelineEngine(abc.ABC):
         """Backend-specific pytree handed to `save_checkpoint`."""
         return (state.params, state.opt_state)
 
+    def checkpoint_job(
+        self, path: str, state: EngineState, step: int = 0,
+        meta: Optional[Dict] = None,
+    ) -> Callable[[], None]:
+        """Snapshot `state` to host NOW; return the deferred write.
+
+        The split is what makes donated train steps and async checkpointing
+        compose: the snapshot (cheap device->host copies) runs on the loop
+        thread before the next step is dispatched — afterwards the donated
+        buffers may be reused/deleted — while the returned closure does only
+        host-side file I/O and may run on a background writer thread
+        (engine.loop submits it there under `LoopConfig.async_io`).
+
+        The default snapshot is `jax.device_get` of the gathered tree;
+        `SpmdEngine` overrides with per-stage-shard host slices so the
+        stage-sharded params/FIFO/optimizer state never gather to one host.
+        """
+        import jax
+
+        host_tree = jax.device_get(self.checkpoint_tree(state))
+
+        def write() -> None:
+            from repro.checkpoint import save_checkpoint
+
+            save_checkpoint(path, host_tree, step=step, meta=meta)
+
+        return write
+
     def save_checkpoint(
         self, path: str, state: EngineState, step: int = 0,
         meta: Optional[Dict] = None,
     ) -> None:
         """Write `state` under `path`; the engine picks the on-disk format.
 
-        The default is the gathered single-file format; `SpmdEngine`
-        overrides it with per-stage-shard files so the stage-sharded
-        params/FIFO/optimizer state never gather to one host. Loading is
-        format-agnostic (`repro.checkpoint.load_checkpoint`).
+        Synchronous composition of `checkpoint_job` (snapshot + immediate
+        write). Loading is format-agnostic
+        (`repro.checkpoint.load_checkpoint`).
         """
-        from repro.checkpoint import save_checkpoint
-
-        save_checkpoint(path, self.checkpoint_tree(state), step=step, meta=meta)
+        self.checkpoint_job(path, state, step=step, meta=meta)()
 
     def load_state(self, tree: Any) -> EngineState:
         """Rebuild an `EngineState` from `checkpoint_tree` output.

@@ -10,14 +10,31 @@ They now live here once, driving any `PipelineEngine` backend.
 
 Checkpoint layout is unchanged from the pre-engine driver ((params,
 opt_state) + step in the manifest), so old checkpoints resume under the loop.
+
+Host I/O stays off the step critical path (DESIGN.md §11):
+
+* the per-step loss is NOT fetched to host every iteration — device scalars
+  accumulate in a pending list and are converted in one batch at the
+  log/metrics cadence, so the loop never forces a device sync per step
+  (this alone helps both backends, donation or not);
+* checkpoints are snapshotted to host synchronously (`engine.checkpoint_job`
+  — cheap device->host copies that must precede the next donated step) but
+  WRITTEN on a single background writer thread, as are metrics files.
+  One serial writer per process keeps the multi-controller barrier sequence
+  inside checkpoint jobs globally ordered. ``async_io=False`` runs every
+  job inline (bit-identical output either way — the writer is drained
+  before `run_loop` returns, and any writer exception re-raises on the
+  loop thread).
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.engine.base import EngineState, PipelineEngine
 
@@ -31,6 +48,60 @@ class LoopConfig:
     out_path: Optional[str] = None
     # constant metadata merged into the JSON metrics file (arch, optimizer...)
     out_meta: Dict[str, Any] = field(default_factory=dict)
+    # run checkpoint/metrics writes on the background writer thread; flip
+    # off to force every write inline on the loop thread (same bytes on
+    # disk — the async/sync parity test pins this)
+    async_io: bool = True
+
+
+class _AsyncWriter:
+    """One serial background writer: jobs run strictly in submission order.
+
+    Serial ordering is load-bearing twice over: metrics flushes must never
+    overtake the checkpoint they were batched with (a metrics file lagging
+    its checkpoint forfeits the pre-resume series at merge time), and in
+    multi-controller runs the checkpoint jobs contain `barrier` calls whose
+    names must hit the rendezvous in the same order on every process.
+
+    A job exception is captured and re-raised on the loop thread at the
+    next submit/close — a failed checkpoint must fail the run, not
+    disappear into a daemon thread.
+    """
+
+    def __init__(self) -> None:
+        self._q: "queue.Queue[Optional[Callable[[], None]]]" = queue.Queue()
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._drain, name="repro-io-writer", daemon=True
+        )
+        self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            if self._exc is not None:
+                continue  # poisoned: drop remaining jobs, surface the error
+            try:
+                job()
+            except BaseException as e:  # noqa: BLE001 — re-raised on loop thread
+                self._exc = e
+
+    def _check(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def submit(self, job: Callable[[], None]) -> None:
+        self._check()
+        self._q.put(job)
+
+    def close(self) -> None:
+        """Drain everything, stop the thread, re-raise any job failure."""
+        self._q.put(None)
+        self._thread.join()
+        self._check()
 
 
 def resume_if_present(
@@ -110,7 +181,8 @@ def run_loop(
     all processes step the engine and save checkpoints (each flushes its
     own shard files), but stdout logging and the metrics JSON are
     process-0-only — non-main processes must never race on the metrics
-    file the main process owns.
+    file the main process owns. The background writer exists on every
+    process (checkpoint jobs carry barriers), metrics jobs only on main.
     """
     from repro.launch.distributed import is_main
 
@@ -120,31 +192,66 @@ def run_loop(
     prefix, prefix_start = (
         _read_metrics_prefix(cfg, start_step) if main else ([], start_step)
     )
-    losses: List[float] = []
-    t0 = time.time()
-    for t in range(start_step, cfg.steps):
-        batch = next(data_iter)
-        state, loss, metrics = engine.step(state, batch, t)
-        losses.append(float(loss))
-        if main and cfg.log_every and t % cfg.log_every == 0:
-            extra = f"  ce {float(metrics['ce']):.4f}" if "ce" in metrics else ""
-            print(f"step {t:5d}  loss {losses[-1]:.4f}{extra}"
-                  f"  ({time.time() - t0:.1f}s)")
-        wrote_ckpt = cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0
-        if wrote_ckpt:
-            # the engine owns the on-disk format (SpmdEngine writes one
-            # arrays file per stage shard instead of gathering to host, and
-            # in multi-process runs each process writes only its own shards)
-            engine.save_checkpoint(cfg.ckpt_dir, state, step=t + 1)
-        # metrics are flushed at every checkpoint too, so the metrics file
-        # never lags a checkpoint a later resume will restart from (a lagging
-        # file would forfeit its pre-resume series at merge time)
-        if main and cfg.out_path and (
-            wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0
-        ):
-            _write_metrics(cfg, prefix + losses, t + 1, prefix_start)
-    if cfg.ckpt_dir:
-        engine.save_checkpoint(cfg.ckpt_dir, state, step=cfg.steps)
-    if main and cfg.out_path:
-        _write_metrics(cfg, prefix + losses, cfg.steps, prefix_start)
+    losses: List[float] = []  # host floats, filled at flush cadence
+    pending: List[Any] = []  # device scalars not yet fetched
+
+    def flush_losses() -> None:
+        # one deferred host sync for the whole pending window — float()
+        # blocks on the newest value, by which time the rest are ready
+        losses.extend(float(x) for x in pending)
+        pending.clear()
+
+    writer = _AsyncWriter() if cfg.async_io else None
+
+    def submit(job: Callable[[], None]) -> None:
+        if writer is None:
+            job()
+        else:
+            writer.submit(job)
+
+    try:
+        t0 = time.time()
+        for t in range(start_step, cfg.steps):
+            batch = next(data_iter)
+            state, loss, metrics = engine.step(state, batch, t)
+            pending.append(loss)
+            if main and cfg.log_every and t % cfg.log_every == 0:
+                flush_losses()
+                extra = (
+                    f"  ce {float(metrics['ce']):.4f}" if "ce" in metrics else ""
+                )
+                print(f"step {t:5d}  loss {losses[-1]:.4f}{extra}"
+                      f"  ({time.time() - t0:.1f}s)")
+            wrote_ckpt = (
+                cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0
+            )
+            if wrote_ckpt:
+                # the engine owns the on-disk format (SpmdEngine writes one
+                # arrays file per stage shard instead of gathering to host,
+                # and in multi-process runs each process writes only its own
+                # shards); the snapshot half runs here, the write half on
+                # the writer thread
+                submit(engine.checkpoint_job(cfg.ckpt_dir, state, step=t + 1))
+            # metrics are flushed at every checkpoint too, so the metrics
+            # file never lags a checkpoint a later resume will restart from
+            # (a lagging file would forfeit its pre-resume series at merge
+            # time; the serial writer preserves ckpt-then-metrics order)
+            if main and cfg.out_path and (
+                wrote_ckpt or (t + 1) % max(cfg.log_every, 1) == 0
+            ):
+                flush_losses()
+                snapshot = prefix + losses
+                done = t + 1
+                submit(lambda s=snapshot, d=done: _write_metrics(
+                    cfg, s, d, prefix_start
+                ))
+        flush_losses()
+        if cfg.ckpt_dir:
+            submit(engine.checkpoint_job(cfg.ckpt_dir, state, step=cfg.steps))
+        if main and cfg.out_path:
+            final = prefix + losses
+            submit(lambda: _write_metrics(cfg, final, cfg.steps, prefix_start))
+    finally:
+        if writer is not None:
+            writer.close()
     return state, losses

@@ -178,6 +178,7 @@ class SpmdEngine(PipelineEngine):
         use_kernels: bool = False,
         topology: Optional[Topology] = None,
         precision: Union[str, PrecisionPolicy, None] = None,
+        donate: Union[bool, str] = "auto",
     ):
         from repro.models.model import init_model
         from repro.optim.base import apply_updates, clip_by_global_norm
@@ -255,7 +256,26 @@ class SpmdEngine(PipelineEngine):
             return stacked, shared, opt_state, loss
 
         self._step_fn = _step  # raw step, kept for the static analyzer
-        self._jit_step = jax.jit(_step)
+        # donate the stacked params, shared params, and optimizer state
+        # (which carries the delay-FIFO queues) into the jitted step: XLA
+        # updates them in place instead of copying every leaf each step.
+        # Safe because the loop always threads the RETURNED state forward and
+        # checkpoints snapshot to host before the next step is dispatched
+        # (DESIGN.md §11); `donate=False` keeps the copying step for
+        # donation-on/off benchmarks and the analyzer's mutation tests.
+        # "auto" resolves per platform: ON where donation removes per-step
+        # copies and halves transient param/opt memory (tpu, gpu), OFF on
+        # the XLA:CPU thunk runtime where in-place aliasing serializes the
+        # schedule and measurably SLOWS the step ~10-20% (DESIGN.md §11
+        # known limits) — the analyzer still audits a donate=True compile
+        # on every host so the aliasing invariant cannot rot off-TPU.
+        if donate == "auto":
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self.donate = bool(donate)
+        self._jit_step = (
+            jax.jit(_step, donate_argnums=(0, 1, 2)) if self.donate
+            else jax.jit(_step)
+        )
         self._stage_shapes = (stacked_s, shared_s)
 
     def init_state(self, params: Any = None, key: Any = None) -> EngineState:
@@ -375,15 +395,43 @@ class SpmdEngine(PipelineEngine):
         args = self.abstract_step_args(seq_len, microbatch_size)
         return self._jit_step.lower(*args).compile()
 
+    def donated_leaf_indices(self) -> Tuple[List[int], List[int]]:
+        """(expected_aliased, queue_leaves): flattened HLO parameter indices
+        of the donated jit arguments (stacked, shared, opt_state).
+
+        Every donated leaf must appear in the compiled module's
+        ``input_output_alias`` EXCEPT the delay-FIFO queue leaves
+        (``grad_q``/``param_q`` in `pipeline.delay.stage_delayed_optimizer`
+        state): their in-program roll (`jnp.roll`-style shift of the queue
+        axis) makes XLA decline the alias, which is correct behaviour — jax
+        lowers them as ``jax.buffer_donor`` (XLA's choice) rather than the
+        pinned ``tf.aliasing_output``. The analyzer's donation check
+        (`analysis.hlo.check_donation`) asserts the first set is aliased.
+        """
+        import jax.tree_util as jtu
+
+        stacked_s, shared_s = self._stage_shapes
+        opt_s = jax.eval_shape(self.opt.init, (stacked_s, shared_s))
+        flat = jtu.tree_flatten_with_path((stacked_s, shared_s, opt_s))[0]
+        expected: List[int] = []
+        queues: List[int] = []
+        for i, (path, _) in enumerate(flat):
+            keys = jtu.keystr(path)
+            if "grad_q" in keys or "param_q" in keys:
+                queues.append(i)
+            else:
+                expected.append(i)
+        return expected, queues
+
     def canonical_params(self, state: EngineState) -> Dict:
         """Unstacked (per-layer) parameter tree, e.g. for evaluation."""
         stacked, shared = state.params
         return unstack_stage_params(stacked, shared, self.cfg)
 
-    def save_checkpoint(
+    def checkpoint_job(
         self, path: str, state: EngineState, step: int = 0,
         meta: Optional[Dict] = None,
-    ) -> None:
+    ):
         """Per-stage-shard save: one arrays file per pipeline stage.
 
         Each leaf's shard axis is read from its live `NamedSharding` (the
@@ -392,29 +440,41 @@ class SpmdEngine(PipelineEngine):
         counters, anything saved before the first compiled step — go to
         shard 0. No gather-to-host of the stage-sharded state.
 
+        Split per the `PipelineEngine.checkpoint_job` contract: the
+        `snapshot_sharded` half runs NOW (it needs the live sharding
+        metadata, and the donated step may reuse these buffers as soon as
+        the loop dispatches the next step); the returned closure performs
+        only file I/O + barriers and may run on a background writer.
+
         Multi-controller: every process calls this at the same step; each
         writes only the shards `Topology.shard_owners` assigns it (sliced
         from locally addressable device shards), the main process alone
         commits the manifest, and the distributed barrier orders
-        name-scan -> shard writes -> manifest -> GC across processes.
+        name-scan -> shard writes -> manifest -> GC across processes. The
+        barriers live in the WRITE half, so async writers must drain jobs
+        in submission order on every process (engine.loop's single serial
+        writer thread).
         """
-        from repro.checkpoint import save_sharded_checkpoint
+        from repro.checkpoint import snapshot_sharded, write_sharded_checkpoint
         from repro.launch.distributed import barrier, is_main, process_index
 
+        owned = None
         kw = {}
         if self._num_processes > 1:
             owners = self.topology.shard_owners(self._num_processes)
             me = process_index()
-            kw = dict(
-                owned_shards=[s for s, p in enumerate(owners) if p == me],
-                write_manifest=is_main(),
-                barrier=barrier,
-            )
-        save_sharded_checkpoint(
-            path, self.checkpoint_tree(state), num_shards=self.num_stages,
-            step=step,
-            meta={"topology": self.topology.describe(),
-                  "precision": self.precision,
-                  "num_processes": self._num_processes, **(meta or {})},
-            **kw,
+            owned = [s for s, p in enumerate(owners) if p == me]
+            kw = dict(write_manifest=is_main(), barrier=barrier)
+        snapshot = snapshot_sharded(
+            self.checkpoint_tree(state), num_shards=self.num_stages,
+            owned_shards=owned,
         )
+        full_meta = {"topology": self.topology.describe(),
+                     "precision": self.precision,
+                     "num_processes": self._num_processes, **(meta or {})}
+
+        def write() -> None:
+            write_sharded_checkpoint(path, snapshot, step=step,
+                                     meta=full_meta, **kw)
+
+        return write

@@ -301,11 +301,38 @@ _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 # ---------------------------------------------------------------------------
 
 
-def _plan(S: int, block_q: int, block_k: int):
-    """Pick power-of-two block sizes and the padded sequence length."""
+def _plan(
+    S: int,
+    block_q=None,
+    block_k=None,
+    *,
+    dh: int = 0,
+    dtype_name: str = "float32",
+    interpret: bool = True,
+):
+    """Resolve block sizes and the padded sequence length.
+
+    Explicit caller blocks always win. When a block is None, the tuned-plan
+    cache (`repro.tune.kernel_plan`, keyed by (kernel, shape, dtype,
+    platform)) is consulted at trace time; on a cache miss the default is
+    one full-operand tile in interpret mode (one grid step — the
+    interpreter pays per grid step, so fewer steps dominate on CPU) and the
+    128-aligned MXU tile compiled.
+    """
+    cap = max(8, _next_pow2(S))
+    if block_q is None or block_k is None:
+        plan = None
+        if dh:
+            from repro.tune import kernel_plan
+
+            plan = kernel_plan("flash", (S, dh), dtype_name)
+        default = cap if interpret else 128
+        if block_q is None:
+            block_q = int(plan["block_q"]) if plan else default
+        if block_k is None:
+            block_k = int(plan["block_k"]) if plan else default
     assert block_q & (block_q - 1) == 0 and block_k & (block_k - 1) == 0, \
         "block sizes must be powers of two"
-    cap = max(8, _next_pow2(S))
     bq, bk = min(block_q, cap), min(block_k, cap)
     return bq, bk, _round_up(S, max(bq, bk))
 
@@ -321,18 +348,23 @@ def flash_attention(
     *,
     causal: bool = True,
     window=None,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q=None,
+    block_k=None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """q,k,v: (B, H, S, dh) -> (B, H, S, dh) in q.dtype; differentiable.
 
     S need not divide the block sizes: inputs are zero-padded to the block
     grid and the pad is sliced back off (padded key columns are masked
-    inside the kernels, so numerics are unaffected).
+    inside the kernels, so numerics are unaffected). ``block_q``/``block_k``
+    default to the autotuned plan for this (S, dh, dtype, platform) — see
+    `_plan`.
     """
     B, H, S, dh = q.shape
-    bq, bk, Sp = _plan(S, block_q, block_k)
+    bq, bk, Sp = _plan(
+        S, block_q, block_k, dh=dh, dtype_name=str(q.dtype),
+        interpret=interpret,
+    )
     BH = B * H
     qf = q.reshape(BH, S, dh)
     kf = k.reshape(BH, S, dh)

@@ -20,8 +20,26 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tuned_blocks(kernel: str, shape, dtype, keys) -> dict:
+    """Tuned tile plan from the autotuner cache (`repro.tune`), restricted
+    to the kernel's block kwargs; {} on a cache miss so the kernel's static
+    defaults apply."""
+    from repro.tune import kernel_plan
+
+    plan = kernel_plan(kernel, shape, str(jnp.dtype(dtype)))
+    if not plan:
+        return {}
+    return {k: int(plan[k]) for k in keys if k in plan}
+
+
 def pallas_matmul(a, b, **kw):
     kw.setdefault("interpret", default_interpret())
+    if not kw["interpret"]:
+        for k, v in _tuned_blocks(
+            "matmul", (a.shape[0], b.shape[1], a.shape[1]), a.dtype,
+            ("block_m", "block_n", "block_k"),
+        ).items():
+            kw.setdefault(k, v)
     return matmul(a, b, **kw)
 
 
@@ -40,7 +58,10 @@ def _rotate2d(x, U, V, transpose: bool, interpret: bool):
         kw = (
             _interp_blocks(("block_m", a.shape[0]), ("block_n", b.shape[1]),
                            ("block_k", a.shape[1]))
-            if interpret else {}
+            if interpret else _tuned_blocks(
+                "matmul", (a.shape[0], b.shape[1], a.shape[1]), a.dtype,
+                ("block_m", "block_n", "block_k"),
+            )
         )
         return matmul(a, b, interpret=interpret, **kw)
 
@@ -74,7 +95,11 @@ def adam_scale(g, m, v, beta2, eps, bc1, bc2, *, interpret: Optional[bool] = Non
     kw = (
         _interp_blocks(("block_r", g.shape[-2] if g.ndim >= 2 else 1),
                        ("block_c", g.shape[-1]))
-        if interpret else {}
+        if interpret else _tuned_blocks(
+            "adam_scale",
+            (g.shape[-2] if g.ndim >= 2 else 1, g.shape[-1]), g.dtype,
+            ("block_r", "block_c"),
+        )
     )
     fn = functools.partial(fused_adam_scale, interpret=interpret, **kw)
     nbatch = g.ndim - 2
@@ -88,7 +113,9 @@ def adam_scale(g, m, v, beta2, eps, bc1, bc2, *, interpret: Optional[bool] = Non
 
 
 def attention(q, k, v, *, causal=True, window=None, interpret: Optional[bool] = None,
-              block_q: int = 128, block_k: int = 128):
+              block_q: Optional[int] = None, block_k: Optional[int] = None):
+    """Blocks default to the autotuned plan (`repro.tune`) for this
+    (S, dh, dtype, platform); see `flash._plan` for the fallback ladder."""
     interpret = default_interpret() if interpret is None else interpret
     return flash_attention(
         q, k, v, causal=causal, window=window,

@@ -140,12 +140,27 @@ def is_main() -> bool:
 def barrier(name: str) -> None:
     """Block until every process reaches the same named barrier.
 
-    Single-process: returns immediately. Multi-process: a tiny collective
-    over all global devices (`multihost_utils.sync_global_devices`), which
-    also cross-checks that every process is at the SAME barrier — two
-    processes saving different steps fail fast instead of corrupting state.
+    Single-process: returns immediately. Multi-process: a coordination-
+    service RPC (`DistributedRuntimeClient.wait_at_barrier`) — NOT a device
+    collective. That distinction is load-bearing for async checkpointing
+    (DESIGN.md §11): the background writer thread runs these barriers while
+    the loop thread runs compiled step collectives, and gloo cannot have
+    two collectives from the same process in flight (interleaved messages
+    trip `op.preamble.length <= op.nbytes`). An RPC barrier matches by
+    name on the coordinator, so two processes saving different steps hang
+    at distinct names and fail by timeout instead of corrupting state.
+
+    Falls back to `multihost_utils.sync_global_devices` (a tiny psum) only
+    when no distributed client exists — that path is NOT safe off the main
+    thread.
     """
     if process_count() == 1:
+        return
+    from jax._src import distributed
+
+    client = getattr(distributed.global_state, "client", None)
+    if client is not None:
+        client.wait_at_barrier(name, timeout_in_ms=600_000)
         return
     from jax.experimental import multihost_utils
 

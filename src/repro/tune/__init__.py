@@ -1,0 +1,132 @@
+"""Kernel block autotuner: cost-model + measured tuning, persistent cache.
+
+Two halves:
+
+* **Populate** (`tune_flash` / `tune_matmul` / `tune_adam_scale`, or the
+  ``python -m repro.tune`` CLI): rank candidate tile plans — analytically
+  via `cost_model` everywhere, empirically via `measure` on a TPU host —
+  and store winners in the JSON cache (`cache.py`).
+* **Consume** (`kernel_plan`): a read-only, memoised lookup that
+  `kernels/flash.py::_plan` and `kernels/ops.py` call at trace time when
+  the caller did not pin block sizes. A miss returns None and the kernels
+  fall back to their static defaults (full-operand tiles in interpret mode,
+  128-aligned MXU tiles compiled), so the cache is never a correctness or
+  availability dependency.
+
+Plans are keyed by ``(kernel, shape, dtype, platform)`` — a cache populated
+on a TPU host never leaks into CPU interpret runs and vice versa.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+from repro.tune.cache import (  # noqa: F401
+    SCHEMA,
+    cache_path,
+    clear_memo,
+    load_cache,
+    lookup,
+    make_key,
+    save_entries,
+)
+from repro.tune.cost_model import (  # noqa: F401
+    best_elementwise_plan,
+    best_flash_plan,
+    best_matmul_plan,
+    candidate_blocks,
+)
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def platform_name() -> str:
+    return jax.default_backend()
+
+
+def kernel_plan(
+    kernel: str,
+    shape: Sequence[int],
+    dtype: str = "float32",
+    platform: Optional[str] = None,
+    path: Optional[str] = None,
+) -> Optional[Dict[str, Any]]:
+    """Cached plan for `(kernel, shape, dtype, platform)`, or None.
+
+    Read-only: trace-time kernel code must never write the cache (a `jit`
+    trace racing a tuner write would be order-dependent)."""
+    return lookup(
+        kernel, tuple(int(d) for d in shape), dtype,
+        platform or platform_name(), path,
+    )
+
+
+def tune_flash(
+    S: int,
+    dh: int,
+    *,
+    batch_heads: int = 1,
+    dtype: str = "float32",
+    causal: bool = True,
+    measured: Optional[bool] = None,
+    path: Optional[str] = None,
+    write: bool = True,
+) -> Dict[str, Any]:
+    """Pick and (by default) persist the flash fwd+bwd block plan.
+
+    ``measured=None`` auto-selects: real timings on TPU, the analytical
+    cost model everywhere else (interpret-mode timings tune the Python
+    interpreter, not Mosaic — DESIGN.md §11 known limits).
+    """
+    platform = platform_name()
+    if measured is None:
+        measured = platform == "tpu"
+    if measured:
+        from repro.tune.measure import best_flash_plan_measured
+
+        plan = best_flash_plan_measured(
+            S, dh, batch_heads=batch_heads, dtype=dtype, causal=causal,
+        )
+    else:
+        plan = best_flash_plan(
+            S, dh, batch_heads=batch_heads,
+            dtype_bytes=_DTYPE_BYTES.get(dtype, 4), causal=causal,
+            platform=platform,
+        )
+    if write:
+        save_entries(
+            {make_key("flash", (S, dh), dtype, platform): plan}, path
+        )
+    return plan
+
+
+def tune_matmul(
+    m: int, n: int, k: int, *, dtype: str = "float32",
+    path: Optional[str] = None, write: bool = True,
+) -> Dict[str, Any]:
+    platform = platform_name()
+    plan = best_matmul_plan(
+        m, n, k, dtype_bytes=_DTYPE_BYTES.get(dtype, 4), platform=platform
+    )
+    if write:
+        save_entries(
+            {make_key("matmul", (m, n, k), dtype, platform): plan}, path
+        )
+    return plan
+
+
+def tune_adam_scale(
+    rows: int, cols: int, *, dtype: str = "float32",
+    path: Optional[str] = None, write: bool = True,
+) -> Dict[str, Any]:
+    platform = platform_name()
+    plan = best_elementwise_plan(
+        rows, cols, dtype_bytes=_DTYPE_BYTES.get(dtype, 4), platform=platform
+    )
+    if write:
+        save_entries(
+            {make_key("adam_scale", (rows, cols), dtype, platform): plan},
+            path,
+        )
+    return plan

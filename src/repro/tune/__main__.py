@@ -1,0 +1,103 @@
+"""CLI: populate / inspect the kernel block-plan cache.
+
+    python -m repro.tune --show
+    python -m repro.tune --flash 512x64 --flash 1024x64 --dtype bfloat16
+    python -m repro.tune --matmul 1024x1024x1024 --adam 1024x1024
+    python -m repro.tune --flash 512x64 --measure   # force timings off-TPU
+
+With no plan arguments, tunes the repo's benchmarked smoke shapes (the
+`kernels_vs_xla` rows), so one bare invocation primes the cache a CI or
+training run will read. Measured timing is the default backend on TPU only;
+elsewhere the analytical cost model runs unless ``--measure`` is forced.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro import tune
+
+# the kernels_vs_xla smoke shapes — what CI benchmarks and therefore the
+# most useful default population set
+DEFAULT_FLASH = ((256, 16), (512, 64))
+DEFAULT_MATMUL = ((64, 64, 64), (256, 256, 256))
+DEFAULT_ADAM = ((64, 64), (1024, 1024))
+
+
+def _dims(spec: str, n: int, flag: str) -> List[int]:
+    parts = spec.lower().split("x")
+    if len(parts) != n or not all(p.isdigit() for p in parts):
+        raise SystemExit(f"{flag} wants {n} x-separated ints, got {spec!r}")
+    return [int(p) for p in parts]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="Kernel block autotuner: populate/inspect the plan cache",
+    )
+    ap.add_argument("--show", action="store_true",
+                    help="print the cache and exit")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="cache file (default: $REPRO_TUNE_CACHE or "
+                         "~/.cache/repro/tune.json)")
+    ap.add_argument("--flash", action="append", default=[], metavar="SxDH",
+                    help="tune flash attention at seq x head_dim")
+    ap.add_argument("--matmul", action="append", default=[], metavar="MxNxK")
+    ap.add_argument("--adam", action="append", default=[], metavar="RxC",
+                    help="tune the fused Adam-scale tile at rows x cols")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--measure", action="store_true",
+                    help="force the measured backend (default on TPU; "
+                         "off-TPU timings measure interpret mode, not Mosaic)")
+    ap.add_argument("--cost-model", action="store_true",
+                    help="force the analytical backend even on TPU")
+    args = ap.parse_args(argv)
+
+    if args.show:
+        entries = tune.load_cache(args.cache)
+        print(f"# {tune.cache_path(args.cache)} — {len(entries)} entries")
+        for key in sorted(entries):
+            plan = entries[key]
+            blocks = {k: v for k, v in plan.items()
+                      if k.startswith("block_")}
+            est = plan.get("us", plan.get("cost_s"))
+            print(f"{key}: {blocks} backend={plan.get('backend')} est={est}")
+        return 0
+
+    measured: Optional[bool] = None
+    if args.measure:
+        measured = True
+    if args.cost_model:
+        measured = False
+
+    flash = [tuple(_dims(s, 2, "--flash")) for s in args.flash]
+    matmul = [tuple(_dims(s, 3, "--matmul")) for s in args.matmul]
+    adam = [tuple(_dims(s, 2, "--adam")) for s in args.adam]
+    if not (flash or matmul or adam):
+        flash, matmul, adam = (
+            list(DEFAULT_FLASH), list(DEFAULT_MATMUL), list(DEFAULT_ADAM)
+        )
+
+    for S, dh in flash:
+        plan = tune.tune_flash(
+            S, dh, dtype=args.dtype, measured=measured, path=args.cache,
+        )
+        print(f"flash {S}x{dh} ({args.dtype}): bq={plan['block_q']} "
+              f"bk={plan['block_k']} [{plan['backend']}]")
+    for m, n, k in matmul:
+        plan = tune.tune_matmul(m, n, k, dtype=args.dtype, path=args.cache)
+        print(f"matmul {m}x{n}x{k} ({args.dtype}): "
+              f"bm={plan['block_m']} bn={plan['block_n']} "
+              f"bk={plan['block_k']} [{plan['backend']}]")
+    for r, c in adam:
+        plan = tune.tune_adam_scale(r, c, dtype=args.dtype, path=args.cache)
+        print(f"adam_scale {r}x{c} ({args.dtype}): br={plan['block_r']} "
+              f"bc={plan['block_c']} [{plan['backend']}]")
+    print(f"cache -> {tune.cache_path(args.cache)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

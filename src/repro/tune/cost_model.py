@@ -1,0 +1,206 @@
+"""Analytical block-plan cost model (VMEM footprint + roofline terms).
+
+Ranks candidate tile plans without running anything, reusing the hardware
+constants from `launch/roofline.py` (TPU v5e: 197 TFLOP/s bf16, 819 GB/s
+HBM). The per-plan estimate is the optimistic-overlap roofline time plus a
+per-grid-step launch overhead:
+
+    cost(plan) = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+                 + grid_steps * step_overhead(platform)
+
+The overhead term is what actually separates plans at a fixed problem size:
+total FLOPs are plan-independent, and HBM traffic only varies with how often
+K/V tiles are re-streamed, so the model reduces to "stream as few tiles as
+fit". On TPU the step overhead is small (Mosaic pipelines the grid) and the
+binding constraint is the ~16 MiB VMEM budget (`pallas_guide`: blocks must
+fit q/k/v/o tiles + f32 scratch in VMEM, second-to-last tile dim >= 8 for
+f32). In interpret mode (CPU validation path) each grid step is a Python
+interpreter iteration costing ~1e-4 s, which dominates everything — the
+model correctly collapses to "one grid step over the whole operand", the
+empirical ~30x win that `kernels/ops.py::_interp_blocks` hardcoded before.
+
+Off-TPU this cost model is the ONLY tuning backend (measuring interpret-mode
+kernels says nothing about Mosaic); on TPU `repro.tune.measure` overrides it
+with real timings (DESIGN.md §11 known limits).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET = 0.75  # leave headroom for Mosaic's own buffers
+MIN_BLOCK = 8  # f32 min sublane tile
+# one grid step in interpret mode is a traced Python iteration; on TPU the
+# grid is pipelined and a step costs roughly a VMEM tile swap
+INTERPRET_STEP_OVERHEAD_S = 1e-4
+TPU_STEP_OVERHEAD_S = 1e-7
+
+
+def _pow2_range(lo: int, hi: int) -> List[int]:
+    out, b = [], lo
+    while b <= hi:
+        out.append(b)
+        b *= 2
+    return out
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def step_overhead_s(platform: str) -> float:
+    return TPU_STEP_OVERHEAD_S if platform == "tpu" else INTERPRET_STEP_OVERHEAD_S
+
+
+def candidate_blocks(size: int, cap: Optional[int] = None) -> List[int]:
+    """Power-of-two block sizes for one dimension of extent `size`: MIN_BLOCK
+    up to the padded full extent (the full-tile plan is always a candidate)."""
+    hi = max(MIN_BLOCK, _next_pow2(size))
+    if cap is not None:
+        hi = min(hi, max(MIN_BLOCK, cap))
+    return _pow2_range(MIN_BLOCK, hi)
+
+
+def flash_vmem_bytes(bq: int, bk: int, dh: int, dtype_bytes: int) -> int:
+    """Resident VMEM for one flash fwd/bwd grid step: q/o tiles (bq, dh),
+    k/v/dk/dv tiles (bk, dh), the (bq, bk) score tile and f32 scratch."""
+    tiles = 2 * bq * dh + 4 * bk * dh  # q, o, k, v, dk, dv
+    score = bq * bk
+    scratch = 4 * (2 * (bq * 1) + bq * dh + 2 * bk * dh)  # m, l, acc (f32)
+    return tiles * dtype_bytes + score * 4 + scratch
+
+
+def flash_plan_cost(
+    S: int,
+    dh: int,
+    bq: int,
+    bk: int,
+    *,
+    batch_heads: int = 1,
+    dtype_bytes: int = 4,
+    causal: bool = True,
+    platform: str = "cpu",
+) -> float:
+    """Estimated seconds for flash attention forward + backward at one
+    (block_q, block_k) plan; `inf` when the plan exceeds the VMEM budget."""
+    if platform == "tpu" and (
+        flash_vmem_bytes(bq, bk, dh, dtype_bytes) > VMEM_BUDGET * VMEM_BYTES
+    ):
+        return float("inf")
+    Sp = -(-S // max(bq, bk)) * max(bq, bk)
+    q_steps, k_steps = Sp // bq, Sp // bk
+    # causal tiles below the diagonal never contribute but are still visited
+    # (the kernels do not early-exit), so only the FLOP term shrinks
+    tile_frac = 0.5 + 0.5 / max(q_steps, k_steps) if causal else 1.0
+    # fwd: qk^T + pv; bwd: recompute qk^T + dq/dk/dv matmuls (~3x fwd)
+    flops = 4.0 * (2 * Sp * Sp * dh) * tile_frac * batch_heads
+    # q/o/do tiles load once per row block (held across the inner loop);
+    # k/v stream once per (iq, ik) tile in fwd and twice in bwd (dq + dkv)
+    q_bytes = 4 * Sp * dh * dtype_bytes
+    kv_bytes = 3 * q_steps * (2 * Sp * dh) * dtype_bytes
+    hbm = (q_bytes + kv_bytes) * batch_heads
+    grid_steps = 3 * batch_heads * q_steps * k_steps  # fwd + dq + dkv calls
+    return max(flops / PEAK_FLOPS, hbm / HBM_BW) + grid_steps * step_overhead_s(
+        platform
+    )
+
+
+def best_flash_plan(
+    S: int,
+    dh: int,
+    *,
+    batch_heads: int = 1,
+    dtype_bytes: int = 4,
+    causal: bool = True,
+    platform: str = "cpu",
+) -> Dict[str, int]:
+    """argmin over the candidate (block_q, block_k) grid; deterministic
+    tie-break toward larger blocks (fewer grid steps)."""
+    best, best_cost = None, float("inf")
+    for bq in candidate_blocks(S):
+        for bk in candidate_blocks(S):
+            c = flash_plan_cost(
+                S, dh, bq, bk, batch_heads=batch_heads,
+                dtype_bytes=dtype_bytes, causal=causal, platform=platform,
+            )
+            if c < best_cost or (
+                c == best_cost and best is not None
+                and bq * bk > best[0] * best[1]
+            ):
+                best, best_cost = (bq, bk), c
+    assert best is not None, "candidate grid cannot be empty"
+    return {"block_q": best[0], "block_k": best[1],
+            "cost_s": best_cost, "backend": "cost_model"}
+
+
+def matmul_vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int) -> int:
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes + bm * bn * 4
+
+
+def matmul_plan_cost(
+    m: int, n: int, k: int, bm: int, bn: int, bk: int,
+    *, dtype_bytes: int = 4, platform: str = "cpu",
+) -> float:
+    """Estimated seconds for a (m,k)x(k,n) tiled matmul at one plan."""
+    if platform == "tpu" and (
+        matmul_vmem_bytes(bm, bn, bk, dtype_bytes) > VMEM_BUDGET * VMEM_BYTES
+    ):
+        return float("inf")
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    flops = 2.0 * m * n * k
+    # A streams once per column block, B once per row block of the output
+    hbm = (gn * m * k + gm * k * n + m * n) * dtype_bytes
+    grid_steps = gm * gn * gk
+    return max(flops / PEAK_FLOPS, hbm / HBM_BW) + grid_steps * step_overhead_s(
+        platform
+    )
+
+
+def best_matmul_plan(
+    m: int, n: int, k: int, *, dtype_bytes: int = 4, platform: str = "cpu"
+) -> Dict[str, int]:
+    best, best_cost = None, float("inf")
+    for bm in candidate_blocks(m):
+        for bn in candidate_blocks(n):
+            for bk in candidate_blocks(k):
+                c = matmul_plan_cost(
+                    m, n, k, bm, bn, bk,
+                    dtype_bytes=dtype_bytes, platform=platform,
+                )
+                if c < best_cost or (
+                    c == best_cost and best is not None
+                    and bm * bn * bk > best[0] * best[1] * best[2]
+                ):
+                    best, best_cost = (bm, bn, bk), c
+    assert best is not None
+    return {"block_m": best[0], "block_n": best[1], "block_k": best[2],
+            "cost_s": best_cost, "backend": "cost_model"}
+
+
+def best_elementwise_plan(
+    rows: int, cols: int, *, dtype_bytes: int = 4, platform: str = "cpu",
+    operands: int = 5,
+) -> Dict[str, int]:
+    """Tile plan for elementwise kernels (fused Adam scale): pure HBM-bound,
+    so the model is grid overhead vs the VMEM budget on `operands` tiles."""
+    best, best_cost = None, float("inf")
+    for br in candidate_blocks(rows):
+        for bc in candidate_blocks(cols):
+            if platform == "tpu" and (
+                operands * br * bc * max(dtype_bytes, 4)
+                > VMEM_BUDGET * VMEM_BYTES
+            ):
+                continue
+            gr, gc = -(-rows // br), -(-cols // bc)
+            hbm = operands * rows * cols * dtype_bytes
+            c = hbm / HBM_BW + gr * gc * step_overhead_s(platform)
+            if c < best_cost or (
+                c == best_cost and best is not None
+                and br * bc > best[0] * best[1]
+            ):
+                best, best_cost = (br, bc), c
+    assert best is not None
+    return {"block_r": best[0], "block_c": best[1],
+            "cost_s": best_cost, "backend": "cost_model"}

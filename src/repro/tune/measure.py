@@ -1,0 +1,110 @@
+"""Measured-timing tuner backend: warmup + median-of-k on live hardware.
+
+This is the backend that takes over from the cost model on a real TPU host
+(`python -m repro.tune --measure`, the default when
+``jax.default_backend() == "tpu"``): every candidate plan is compiled and
+timed on device, and the cache records the empirical winner. Off-TPU the
+kernels only run in interpret mode, where timings measure the Python
+interpreter rather than Mosaic — measuring there would tune for the wrong
+machine, so the CLI refuses unless ``--measure`` is forced explicitly.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def measure_us(
+    fn: Callable, *args, iters: int = 10, warmup: int = 2
+) -> float:
+    """Median microseconds per call; compile + warmup excluded, every timed
+    call individually synchronised with `block_until_ready`."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    samples: List[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return 1e6 * statistics.median(samples)
+
+
+def _flash_inputs(S: int, dh: int, batch_heads: int, dtype: str):
+    shape = (1, batch_heads, S, dh)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v, do = (
+        jax.random.normal(kk, shape).astype(dtype) for kk in ks
+    )
+    return q, k, v, do
+
+
+def measure_flash_plan(
+    S: int,
+    dh: int,
+    bq: int,
+    bk: int,
+    *,
+    batch_heads: int = 1,
+    dtype: str = "float32",
+    causal: bool = True,
+    interpret: Optional[bool] = None,
+    iters: int = 10,
+    warmup: int = 2,
+) -> float:
+    """Measured fwd+bwd microseconds for one flash (block_q, block_k) plan."""
+    from repro.kernels import ops
+
+    q, k, v, do = _flash_inputs(S, dh, batch_heads, dtype)
+
+    def fwd(q, k, v):
+        return ops.attention(
+            q, k, v, causal=causal, block_q=bq, block_k=bk,
+            interpret=interpret,
+        )
+
+    grad = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(fwd(q, k, v).astype(jnp.float32) * do),
+        argnums=(0, 1, 2),
+    ))
+    us_f = measure_us(jax.jit(fwd), q, k, v, iters=iters, warmup=warmup)
+    us_b = measure_us(grad, q, k, v, iters=iters, warmup=warmup)
+    return us_f + us_b
+
+
+def best_flash_plan_measured(
+    S: int,
+    dh: int,
+    *,
+    batch_heads: int = 1,
+    dtype: str = "float32",
+    causal: bool = True,
+    interpret: Optional[bool] = None,
+    iters: int = 10,
+    warmup: int = 2,
+) -> Dict[str, Any]:
+    """Time every candidate (block_q, block_k) pair; return the winner."""
+    from repro.tune.cost_model import candidate_blocks
+
+    best: Optional[Dict[str, Any]] = None
+    for bq in candidate_blocks(S):
+        for bk in candidate_blocks(S):
+            try:
+                us = measure_flash_plan(
+                    S, dh, bq, bk, batch_heads=batch_heads, dtype=dtype,
+                    causal=causal, interpret=interpret, iters=iters,
+                    warmup=warmup,
+                )
+            except Exception:  # plan rejected by the compiler (VMEM, tiling)
+                continue
+            if best is None or us < best["us"]:
+                best = {"block_q": bq, "block_k": bk, "us": us,
+                        "backend": "measured"}
+    if best is None:
+        raise RuntimeError(
+            f"no flash plan compiled for S={S}, dh={dh} on this backend"
+        )
+    return best

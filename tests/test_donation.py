@@ -1,0 +1,147 @@
+"""Donated train step: the `input_output_alias` parser on fixture HLO, the
+`check_donation` analyzer check against the REAL compiled SpmdEngine step,
+and (subprocess — needs the 2-stage analyzer topology) a seeded mutation
+that strips `donate_argnums` and must flip exactly the donation check."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.hlo import check_donation, parse_input_output_aliases
+
+FIXTURE = """
+HloModule jit__step, is_scheduled=true, entry_computation_layout={...}, \
+input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {}, must-alias), \
+{3,0}: (5, {}, may-alias) }, allow_spmd_sharding_propagation_to_output={true}
+
+ENTRY %main () -> () {
+}
+"""
+
+
+def test_parse_input_output_aliases_fixture():
+    assert parse_input_output_aliases(FIXTURE) == {0: 0, 2: 1, 5: 3}
+    assert parse_input_output_aliases("HloModule bare\n") == {}
+
+
+def test_check_donation_fixture():
+    ok = check_donation(FIXTURE, [0, 2, 5])
+    assert ok.passed, ok.detail
+    missing = check_donation(FIXTURE, [0, 1, 2])
+    assert not missing.passed
+    assert missing.data["missing"] == [1]
+    assert "donate_argnums" in missing.detail
+    # queue leaves are reported, never required
+    queues = check_donation(FIXTURE, [0, 2], queue_params=[3, 5])
+    assert queues.passed
+    assert queues.data["queue_leaves"] == 2
+    assert queues.data["queue_aliased"] == 1
+
+
+@pytest.fixture(scope="module")
+def engines():
+    from repro.configs.base import (
+        AttentionConfig, BlockSpec, ModelConfig, OptimizerConfig,
+    )
+    from repro.engine.spmd import SpmdEngine
+    from repro.launch.topology import Topology
+
+    cfg = ModelConfig(
+        num_layers=2, d_model=16, d_ff=24, vocab_size=96, max_seq_len=32,
+        attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8),
+        pattern=(BlockSpec("attn", "dense"),), scan_layers=False,
+    )
+    ocfg = OptimizerConfig(name="adam", learning_rate=1e-3, total_steps=4,
+                           schedule="constant")
+
+    def make(donate):
+        return SpmdEngine(
+            cfg, ocfg, num_stages=1, num_microbatches=1,
+            topology=Topology(stages=1, data=1), donate=donate,
+        )
+
+    return make
+
+
+def test_compiled_step_aliases_all_donated_leaves(engines):
+    engine = engines(True)
+    hlo = engine.compiled_step(seq_len=8).as_text()
+    expected, queues = engine.donated_leaf_indices()
+    res = check_donation(hlo, expected, queues)
+    assert res.passed, res.detail
+    # the alias map is non-trivial: params + opt moments, not just a scalar
+    assert res.data["aliased"] >= len(expected) > 4
+
+
+def test_undonated_step_flips_the_donation_check(engines):
+    engine = engines(False)
+    hlo = engine.compiled_step(seq_len=8).as_text()
+    expected, queues = engine.donated_leaf_indices()
+    res = check_donation(hlo, expected, queues)
+    assert not res.passed
+    assert len(res.data["missing"]) == min(len(expected), 32)
+
+
+def test_donate_auto_resolves_per_platform(engines):
+    import jax
+
+    engine = engines("auto")
+    # on the CPU test host auto is OFF (XLA:CPU aliasing serializes the
+    # thunk schedule); on an accelerator it is ON
+    assert engine.donate == (jax.default_backend() in ("tpu", "gpu"))
+
+
+# ---------------------------------------------------------------------------
+# seeded mutation through the REAL analyzer cell (subprocess: stage mesh)
+# ---------------------------------------------------------------------------
+
+MUTATION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, "src")
+import json
+from repro.analysis import runner
+from repro.engine.spmd import SpmdEngine
+
+def checks(cell):
+    return {r.name: r.passed for r in cell}
+
+res = {"baseline": checks(
+    runner.audit_cell("1f1b", "async", "adam", "1pod")
+)}
+
+# mutation: strip donation from every engine the analyzer builds — only
+# the donation check may flip
+orig = SpmdEngine.__init__
+def undonated(self, *a, **kw):
+    kw["donate"] = False
+    return orig(self, *a, **kw)
+SpmdEngine.__init__ = undonated
+try:
+    res["undonated"] = checks(
+        runner.audit_cell("1f1b", "async", "adam", "1pod")
+    )
+finally:
+    SpmdEngine.__init__ = orig
+print(json.dumps(res))
+"""
+
+
+def test_donation_mutation_flips_exactly_the_donation_check():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", MUTATION_SCRIPT],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    base, mut = res["baseline"], res["undonated"]
+    assert all(base.values()), base
+    assert not mut["donation"]
+    flipped = {k for k in base if base[k] != mut[k]}
+    assert flipped == {"donation"}, (base, mut)

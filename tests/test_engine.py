@@ -10,6 +10,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import (
     AttentionConfig,
@@ -239,6 +240,56 @@ def test_loop_checkpoint_resume_and_metrics(tmp_path):
     _, full = run_loop(engine3, batches(CFG, 4, 16, seed=0),
                        LoopConfig(steps=steps), state=state3)
     assert first + rest == full  # exact, not approximate
+
+
+def test_async_io_parity_with_inline_writes(tmp_path):
+    """`async_io=True` (background writer) and `False` (inline) must leave
+    bit-identical results: same losses, same metrics JSON, same checkpoint.
+    The writer is drained before run_loop returns, so nothing is in flight
+    when the comparison runs."""
+    steps = 5
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    ocfg = OptimizerConfig(name="adam", learning_rate=1e-3, total_steps=steps)
+    outs = {}
+    for mode in (True, False):
+        ckpt = str(tmp_path / f"ckpt_{mode}")
+        out = str(tmp_path / f"m_{mode}.json")
+        engine = SimEngine(CFG, build_optimizer(ocfg, params, CFG, num_stages=1))
+        state = engine.init_state(params=params)
+        _, losses = run_loop(
+            engine, batches(CFG, 4, 16, seed=0),
+            LoopConfig(steps=steps, log_every=2, ckpt_dir=ckpt, ckpt_every=2,
+                       out_path=out, async_io=mode),
+            state=state,
+        )
+        from repro.checkpoint import load_checkpoint
+
+        tree, step, _ = load_checkpoint(ckpt)
+        outs[mode] = (losses, json.loads(open(out).read()), step,
+                      jax.tree_util.tree_leaves(tree))
+    assert outs[True][0] == outs[False][0]
+    assert outs[True][1] == outs[False][1]
+    assert outs[True][2] == outs[False][2] == steps
+    for a, b in zip(outs[True][3], outs[False][3]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_writer_failure_raises_on_loop_thread(tmp_path):
+    """A failed background write must fail the run, not vanish into the
+    daemon thread: point the metrics file at an unwritable path."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("file where a directory must go")
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    ocfg = OptimizerConfig(name="adam", learning_rate=1e-3, total_steps=3)
+    engine = SimEngine(CFG, build_optimizer(ocfg, params, CFG, num_stages=1))
+    state = engine.init_state(params=params)
+    with pytest.raises(OSError):
+        run_loop(
+            engine, batches(CFG, 4, 16, seed=0),
+            LoopConfig(steps=3, log_every=1,
+                       out_path=str(blocker / "m.json"), async_io=True),
+            state=state,
+        )
 
 
 SYNC_AGREEMENT_SCRIPT = r"""

@@ -1,0 +1,183 @@
+"""Kernel block autotuner (`repro.tune`): persistent-cache semantics
+(round-trip, stale-schema keys ignored, corrupt file tolerated, atomic
+merge), the analytical cost model's platform-dependent choices, and the
+trace-time consumption path through `kernels/flash.py::_plan`."""
+import json
+
+import pytest
+
+from repro import tune
+from repro.tune import cache as tcache
+from repro.tune.cost_model import (
+    best_elementwise_plan,
+    best_flash_plan,
+    best_matmul_plan,
+    candidate_blocks,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    # the lookup memo is process-global; every test starts and ends clean
+    tcache.clear_memo()
+    yield
+    tcache.clear_memo()
+
+
+# ---------------------------------------------------------------------------
+# cache: round-trip, tolerance, atomic merge
+# ---------------------------------------------------------------------------
+
+
+def test_cache_round_trip(tmp_path):
+    p = str(tmp_path / "tune.json")
+    plan = {"block_q": 256, "block_k": 128, "backend": "cost_model"}
+    tcache.save_entries({tcache.make_key("flash", (256, 16), "float32",
+                                         "cpu"): plan}, p)
+    assert tcache.lookup("flash", (256, 16), "float32", "cpu", p) == plan
+    # different shape / dtype / platform / kernel: all misses
+    assert tcache.lookup("flash", (512, 16), "float32", "cpu", p) is None
+    assert tcache.lookup("flash", (256, 16), "bfloat16", "cpu", p) is None
+    assert tcache.lookup("flash", (256, 16), "float32", "tpu", p) is None
+    assert tcache.lookup("matmul", (256, 16), "float32", "cpu", p) is None
+
+
+def test_cache_merge_preserves_other_keys(tmp_path):
+    p = str(tmp_path / "tune.json")
+    k1 = tcache.make_key("flash", (128, 16), "float32", "cpu")
+    k2 = tcache.make_key("matmul", (64, 64, 64), "float32", "cpu")
+    tcache.save_entries({k1: {"block_q": 128}}, p)
+    tcache.save_entries({k2: {"block_m": 64}}, p)
+    got = tcache.load_cache(p)
+    assert set(got) == {k1, k2}
+    # last writer wins per key
+    tcache.save_entries({k1: {"block_q": 64}}, p)
+    assert tcache.load_cache(p)[k1] == {"block_q": 64}
+
+
+def test_cache_missing_and_corrupt_files_are_empty(tmp_path):
+    assert tcache.load_cache(str(tmp_path / "nope.json")) == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text("{truncated")
+    assert tcache.load_cache(str(bad)) == {}
+    assert tcache.lookup("flash", (256, 16), "float32", "cpu",
+                         str(bad)) is None
+    # a corrupt file is also recoverable: the next write replaces it
+    tcache.save_entries({"flash|8|float32|cpu": {"block_q": 8}}, str(bad))
+    assert tcache.load_cache(str(bad)) == {"flash|8|float32|cpu":
+                                           {"block_q": 8}}
+
+
+def test_cache_foreign_schema_and_junk_entries_ignored(tmp_path):
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps({
+        "schema": "repro-tune/v0",
+        "entries": {"flash|256x16|float32|cpu": {"block_q": 999}},
+    }))
+    # stale layout: every key under it is untrusted
+    assert tcache.load_cache(str(p)) == {}
+    # current schema but junk values: non-dict entries dropped on read
+    p.write_text(json.dumps({
+        "schema": tcache.SCHEMA,
+        "entries": {"good|1|float32|cpu": {"block_q": 8}, "junk": 17},
+    }))
+    assert tcache.load_cache(str(p)) == {"good|1|float32|cpu": {"block_q": 8}}
+
+
+def test_save_entries_invalidates_memo(tmp_path):
+    p = str(tmp_path / "tune.json")
+    key = tcache.make_key("flash", (64, 16), "float32", "cpu")
+    assert tcache.lookup("flash", (64, 16), "float32", "cpu", p) is None
+    tcache.save_entries({key: {"block_q": 64, "block_k": 64}}, p)
+    # without clear_memo inside save_entries this would still be None
+    assert tcache.lookup("flash", (64, 16), "float32", "cpu",
+                         p)["block_q"] == 64
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_blocks_powers_of_two():
+    assert candidate_blocks(256) == [8, 16, 32, 64, 128, 256]
+    assert candidate_blocks(100) == [8, 16, 32, 64, 128]  # next pow2 cap
+    assert candidate_blocks(4) == [8]  # f32 min sublane floor
+
+
+def test_cost_model_interpret_prefers_full_tiles():
+    # off-TPU the per-grid-step interpreter overhead dominates: the model
+    # must collapse to one full-operand tile (fewest grid steps)
+    plan = best_flash_plan(256, 16, batch_heads=2, dtype_bytes=4,
+                           causal=True, platform="cpu")
+    assert (plan["block_q"], plan["block_k"]) == (256, 256)
+    assert plan["backend"] == "cost_model"
+    mm = best_matmul_plan(256, 256, 256, dtype_bytes=4, platform="cpu")
+    assert (mm["block_m"], mm["block_n"], mm["block_k"]) == (256, 256, 256)
+    el = best_elementwise_plan(1024, 1024, dtype_bytes=4, platform="cpu")
+    assert (el["block_r"], el["block_c"]) == (1024, 1024)
+
+
+def test_cost_model_tpu_respects_vmem_budget():
+    # a long sequence cannot take the full-operand tile on TPU: the plan
+    # must fit the VMEM budget, so block_q * block_k stays bounded
+    plan = best_flash_plan(8192, 128, batch_heads=8, dtype_bytes=4,
+                           causal=True, platform="tpu")
+    from repro.tune.cost_model import VMEM_BUDGET, VMEM_BYTES, flash_vmem_bytes
+
+    assert flash_vmem_bytes(plan["block_q"], plan["block_k"], 128, 4) \
+        <= VMEM_BUDGET * VMEM_BYTES
+    assert plan["cost_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# tune -> cache -> kernels/_plan consumption
+# ---------------------------------------------------------------------------
+
+
+def test_tune_flash_persists_and_kernel_plan_reads(tmp_path):
+    p = str(tmp_path / "tune.json")
+    plan = tune.tune_flash(256, 16, batch_heads=2, path=p)
+    got = tune.kernel_plan("flash", (256, 16), "float32", path=p)
+    assert got is not None
+    assert (got["block_q"], got["block_k"]) == (plan["block_q"],
+                                                plan["block_k"])
+    # write=False must not touch the cache (benchmarks rely on this)
+    tune.tune_flash(512, 64, path=p, write=False)
+    assert tune.kernel_plan("flash", (512, 64), "float32", path=p) is None
+
+
+def test_flash_plan_consults_cache(tmp_path, monkeypatch):
+    from repro.kernels.flash import _plan
+
+    p = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", p)
+    tcache.save_entries({
+        tcache.make_key("flash", (256, 16), "float32",
+                        tune.platform_name()): {"block_q": 32, "block_k": 64},
+    }, p)
+    bq, bk, s = _plan(256, dh=16, dtype_name="float32", interpret=True)
+    assert (bq, bk) == (32, 64)
+    # explicit caller blocks always win over the cache
+    bq, bk, _ = _plan(256, 16, 16, dh=16, dtype_name="float32",
+                      interpret=True)
+    assert (bq, bk) == (16, 16)
+    # a miss falls back to the static default (full tile in interpret mode)
+    bq, bk, _ = _plan(128, dh=64, dtype_name="float32", interpret=True)
+    assert (bq, bk) == (128, 128)
+
+
+def test_tuned_blocks_numerics_match_defaults():
+    """A tuned plan changes speed, never values: attention with cached
+    blocks agrees with the hardcoded-default blocks."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 16))
+    base = ops.attention(q, k, v, window=32)
+    tuned = ops.attention(q, k, v, window=32, block_q=32, block_k=64)
+    assert float(jnp.max(jnp.abs(base - tuned))) < 1e-5
