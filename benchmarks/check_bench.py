@@ -21,6 +21,18 @@ import sys
 from typing import Dict
 
 
+# rows that must exist in every fresh payload: a silent disappearance means
+# the comparison stopped being measured, which the name-matched gate alone
+# would wave through as "baseline-only". The async data-axis trio is pinned
+# because it is the acceptance evidence that the deferred reduction stays on
+# the benchmarked path.
+REQUIRED_ROWS = (
+    "kernels_vs_xla/data_axis_sync",
+    "kernels_vs_xla/data_axis_async_d1",
+    "kernels_vs_xla/data_axis_async_d2",
+)
+
+
 def _rows_by_name(payload: Dict) -> Dict[str, float]:
     return {
         r["name"]: float(r["us_per_call"])
@@ -46,6 +58,11 @@ def compare(new: Dict, baseline: Dict, max_slowdown: float):
         lines.append(f"  {name}: removed (baseline-only, not gated)")
     for name in sorted(set(new_rows) - set(base_rows)):
         lines.append(f"  {name}: new row (no baseline, not gated)")
+    if new.get("benchmark") == "kernels_vs_xla":
+        for name in REQUIRED_ROWS:
+            if name not in new_rows:
+                failures.append(name)
+                lines.append(f"  {name}: MISSING (required row)  <-- FAIL")
     return failures, lines
 
 

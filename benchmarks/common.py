@@ -60,13 +60,19 @@ def train_curve(
     seed: int = 0,
     batch: int = 8,
     seq: int = 32,
+    data_delay: int = 0,
     **okw,
 ) -> Dict:
-    """Run one simulated-async training; returns losses + per-step wall time."""
+    """Run one simulated-async training; returns losses + per-step wall time.
+
+    ``data_delay`` adds the uniform data-axis staleness of a deferred
+    cross-replica reduction on top of each leaf's pipeline delay (the sim
+    analogue of the SPMD engine's ``data_async`` FIFO)."""
     ocfg = OptimizerConfig(name=name, learning_rate=lr, total_steps=steps,
                            rotation_freq=okw.pop("rotation_freq", 5), **okw)
     params = init_model(jax.random.PRNGKey(seed), cfg)
-    opt = build_optimizer(ocfg, params, cfg, num_stages=stages)
+    opt = build_optimizer(ocfg, params, cfg, num_stages=stages,
+                          data_delay=data_delay)
     engine = SimEngine(cfg, opt)
     state = engine.init_state(params=params)
     t0 = time.perf_counter()
@@ -103,9 +109,10 @@ for r in runs:
                            total_steps=r["steps"], rotation_freq=r["rotation_freq"],
                            **r["okw"])
     engine = SpmdEngine(cfg, ocfg, num_stages=K, num_microbatches=K,
-                        topology=Topology(stages=K, data=1),
+                        topology=Topology(stages=K, data=r["data_par"]),
                         schedule=r["schedule"], use_kernels=r["use_kernels"],
-                        precision=r["precision"])
+                        precision=r["precision"],
+                        data_async=r["data_async"], data_delay=r["data_delay"])
     params = init_model(jax.random.PRNGKey(r["seed"]), cfg)
     state = engine.init_state(params=params)
     data = batches(cfg, r["batch"], r["seq"], seed=r["seed"])
@@ -121,11 +128,13 @@ def spmd_train_curves(runs: List[Dict]) -> List[Dict]:
     """Run `train_curve`-style async trainings on the SPMD backend.
 
     Each run dict: {name, stages, steps, num_layers, lr, seed, batch, seq,
-    rotation_freq, okw}. All runs execute in ONE subprocess with
-    ``max(stages)`` forced host devices (smaller stage counts use a device
-    prefix), so the engine-driven fig5/fig6 sweeps cross-validate the sim
-    convergence claims on the real shard_map runtime without a process per
-    point. Staleness matches the sim path: the per-stage delay FIFO on the
+    rotation_freq, okw, data_par, data_async, data_delay}. All runs execute
+    in ONE subprocess with ``max(stages * data_par)`` forced host devices
+    (smaller topologies use a device prefix), so the engine-driven fig5/fig6
+    sweeps cross-validate the sim convergence claims on the real shard_map
+    runtime without a process per point. ``data_par > 1`` shards the batch
+    over replicas; ``data_async``/``data_delay`` route the cross-replica
+    gradient reduction through the engine's deferred FIFO. Staleness matches the sim path: the per-stage delay FIFO on the
     stage-stacked layout == the simulator's per-leaf FIFO.
     """
     import json
@@ -134,10 +143,11 @@ def spmd_train_curves(runs: List[Dict]) -> List[Dict]:
 
     defaults = {"num_layers": 8, "lr": 3e-3, "seed": 0, "batch": 8, "seq": 32,
                 "rotation_freq": 5, "okw": {}, "schedule": "fill_drain",
-                "use_kernels": False, "precision": "f32"}
+                "use_kernels": False, "precision": "f32", "data_par": 1,
+                "data_async": False, "data_delay": 0}
     runs = [{**defaults, **r} for r in runs]
     script = SPMD_CURVES_SCRIPT % {
-        "devices": max(r["stages"] for r in runs),
+        "devices": max(r["stages"] * r["data_par"] for r in runs),
         "runs": repr(runs),
     }
     env = dict(os.environ)

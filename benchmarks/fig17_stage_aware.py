@@ -6,6 +6,13 @@ backend.
 spmd`` runs the same three allocations on the shard_map pipeline runtime
 (subprocess with forced host devices), where the per-stage periods live
 inside one stacked ``(K, per, m, n)`` leaf via the vectorized refresh mask.
+
+The sim sweep is 2-D: each allocation runs at every data delay in
+``DATA_DELAYS`` (0 = pipeline staleness only; D > 0 composes the uniform
+staleness of a D-step deferred cross-replica reduction onto every leaf, the
+async data axis). The stage-aware allocation renormalises its refresh
+budget over the TOTAL per-leaf delay tau + D, so the sweep shows whether
+its advantage over uniform survives when the data axis goes asynchronous.
 """
 from __future__ import annotations
 
@@ -87,15 +94,25 @@ def spmd_rows(quick: bool = True):
     return rows
 
 
+# second sweep axis: data-axis staleness of the deferred reduction
+DATA_DELAYS = (0, 1, 2)
+
+
 def sim_rows(quick: bool = True, smoke: bool = False):
     stages, steps = (4, 20) if smoke else (8, 120 if quick else 400)
+    delays = DATA_DELAYS[:2] if smoke else DATA_DELAYS
     rows = []
-    for label, kw in ALLOCATIONS:
-        out = train_curve("basis_rotation", stages=stages, steps=steps,
-                          rotation_freq=10, **kw)
-        rows.append({"name": f"fig17/sim_{label}",
-                     "us_per_call": out["us_per_step"],
-                     "derived": f"final={tail(out['losses']):.3f}"})
+    for data_delay in delays:
+        for label, kw in ALLOCATIONS:
+            out = train_curve("basis_rotation", stages=stages, steps=steps,
+                              rotation_freq=10, data_delay=data_delay, **kw)
+            # D=0 keeps the original row names so the committed BENCH
+            # baselines and any trend tooling keep matching
+            suffix = f"_dd{data_delay}" if data_delay else ""
+            rows.append({"name": f"fig17/sim_{label}{suffix}",
+                         "us_per_call": out["us_per_step"],
+                         "derived": (f"data_delay={data_delay};"
+                                     f"final={tail(out['losses']):.3f}")})
     return rows
 
 

@@ -7,7 +7,9 @@ kernel against its pure-jnp reference, the flash-attention kernel (forward
 AND its custom-vjp backward) against `kernels/ref.py::flash_attention_ref`
 under `jax.grad`, and a complete SpmdEngine step with the kernel path and
 precision policy on/off — plus a step-time/HBM roofline row from the
-compiled step's cost analysis. Off-TPU the kernels run in interpret mode —
+compiled step's cost analysis, and the sync-vs-async data-axis step-time
+rows (`data_axis_rows`: the cross-replica gradient all-reduce on vs off
+the step critical path at data delays 1 and 2). Off-TPU the kernels run in interpret mode —
 the comparison there validates wiring and correctness, not speed (Mosaic
 compilation only exists on TPU); on a TPU host the same rows measure the
 real kernel path.
@@ -310,6 +312,45 @@ def roofline_row(engine, batch: int, seq: int):
     }
 
 
+# sync vs async data axis: the same 2-stage, 2-replica 1F1B training with
+# the cross-replica gradient all-reduce on the step critical path (sync) vs
+# deferred D steps through the engine FIFO (async). On CPU hosts the
+# absolute win is modest (gloo-free intra-process collectives are cheap);
+# the rows exist so the BENCH trajectory records the step-time relation and
+# a TPU refresh measures the real overlap win.
+DATA_AXIS_RUN = {
+    "name": "adam", "stages": 2, "num_layers": 4, "batch": 8, "seq": 32,
+    "lr": 3e-3, "seed": 0, "schedule": "1f1b", "data_par": 2,
+}
+
+DATA_AXIS_VARIANTS = (
+    ("sync", {}),
+    ("async_d1", {"data_async": True, "data_delay": 1}),
+    ("async_d2", {"data_async": True, "data_delay": 2}),
+)
+
+
+def data_axis_rows(quick: bool):
+    from benchmarks.common import spmd_train_curves, tail
+
+    steps = 8 if quick else 30
+    runs = [{**DATA_AXIS_RUN, "steps": steps, **kw}
+            for _, kw in DATA_AXIS_VARIANTS]
+    res = spmd_train_curves(runs)
+    rows = []
+    for (label, kw), r in zip(DATA_AXIS_VARIANTS, res):
+        rows.append({
+            "name": f"kernels_vs_xla/data_axis_{label}",
+            "us_per_call": r["us_per_step"],
+            "derived": (
+                f"stages=2;data_par=2;steps={steps};"
+                f"delay={kw.get('data_delay', 0)};"
+                f"final={tail(r['losses'], 3):.3f}"
+            ),
+        })
+    return rows
+
+
 # pinned perf-trajectory config: 2-stage 1F1B with the full kernel + bf16
 # path — the BENCH artifact tracks (step_time_us, final_loss) across PRs
 BENCH_RUN = {
@@ -346,11 +387,13 @@ def run(quick: bool = True):
             optimizer_rows(2, 1, 32) + adam_scale_rows((64, 64))
             + attention_rows(1, 2, 256, 16, window=32)
             + full_step_rows(num_layers=2, batch=4, seq=32)
+            + data_axis_rows(quick=True)
         )
     return (
         optimizer_rows(4, 2, 256) + adam_scale_rows((1024, 1024))
         + attention_rows(2, 4, 512, 64, window=128)
         + full_step_rows(num_layers=8, batch=8, seq=64)
+        + data_axis_rows(quick=False)
     )
 
 

@@ -37,6 +37,7 @@ from repro.analysis.hlo import (
     COLLECTIVE_OPS,
     CollectiveInstr,
     CollectiveStats,
+    check_async_step_reduction,
     check_collective_axes,
     check_data_reduction,
     collective_stats,
@@ -73,6 +74,7 @@ __all__ = [
     "COLLECTIVE_OPS",
     "CollectiveInstr",
     "CollectiveStats",
+    "check_async_step_reduction",
     "check_collective_axes",
     "check_data_reduction",
     "collective_stats",

@@ -337,33 +337,86 @@ def check_donation(
     )
 
 
+def _data_all_reduce_count(
+    instrs: Sequence[CollectiveInstr], topology: Any
+) -> int:
+    """Number of all-reduces grouped exactly over the topology's data axes
+    (only groupings that actually communicate — singleton groups on a
+    1-data-shard topology don't count)."""
+    want = _normalize(topology.replica_groups(topology.data_axes))
+    if not any(len(g) > 1 for g in want):
+        return 0
+    return sum(
+        1 for ins in instrs
+        if ins.op == "all-reduce" and _instr_grouping(ins, topology) == want
+    )
+
+
 def check_data_reduction(
     instrs: Sequence[CollectiveInstr],
     topology: Any,
     name: str = "data_reduction",
+    deferred: bool = False,
 ) -> CheckResult:
     """The combined data-axes gradient all-reduce is present iff the
     topology splits data: over ``("pod", "data")`` on multi-pod shapes —
     the pod+data pmean exists exactly when pods > 1 (or data > 1).
 
+    ``deferred=True`` audits an ASYNC-data step program, where the
+    reduction has been moved off the critical path into a separate reduce
+    program: the in-step data all-reduce must then be ABSENT no matter how
+    many data shards the topology has (pair with
+    `check_async_step_reduction` to prove the reduce program still carries
+    it).
+
     Only collectives that actually communicate count: on a 1-data-shard
     topology the data grouping is all singletons and XLA may legitimately
     leave the degenerate pmean in place (or delete it)."""
-    want = _normalize(topology.replica_groups(topology.data_axes))
-    present = any(
-        ins.op == "all-reduce"
-        and _instr_grouping(ins, topology) == want
-        and any(len(g) > 1 for g in want)
-        for ins in instrs
-    )
-    need = topology.data_shards > 1
+    present = _data_all_reduce_count(instrs, topology) > 0
+    need = (not deferred) and topology.data_shards > 1
     ok = present == need
     detail = "" if ok else (
         f"all-reduce over data axes {topology.data_axes} "
         f"{'missing' if need else 'present'} on topology "
         f"{topology.describe()} with {topology.data_shards} data shard(s)"
+        + (" (deferred/async data mode)" if deferred else "")
     )
     return CheckResult(
         name, ok, detail,
-        {"present": present, "required": need, "data_axes": list(topology.data_axes)},
+        {"present": present, "required": need, "deferred": deferred,
+         "data_axes": list(topology.data_axes)},
+    )
+
+
+def check_async_step_reduction(
+    step_instrs: Sequence[CollectiveInstr],
+    reduce_instrs: Sequence[CollectiveInstr],
+    topology: Any,
+    name: str = "async_data_reduction",
+) -> CheckResult:
+    """Async data mode invariant, checked over the step/reduce program PAIR:
+    the train-step HLO contains NO all-reduce grouped over the data axes
+    (the critical path is communication-free along data), and the deferred
+    reduce program contains AT LEAST ONE (the reduction was moved, not
+    lost). On a 1-data-shard topology only the absence half applies."""
+    in_step = _data_all_reduce_count(step_instrs, topology)
+    in_reduce = _data_all_reduce_count(reduce_instrs, topology)
+    need_reduce = topology.data_shards > 1
+    bad: List[str] = []
+    if in_step:
+        bad.append(
+            f"{in_step} data-axes all-reduce(s) on the async step critical "
+            f"path (axes {topology.data_axes})"
+        )
+    if need_reduce and not in_reduce:
+        bad.append(
+            f"deferred reduce program has no all-reduce over data axes "
+            f"{topology.data_axes} — the gradient reduction was lost, not "
+            f"deferred"
+        )
+    return CheckResult(
+        name, not bad, "; ".join(bad),
+        {"in_step": in_step, "in_reduce": in_reduce,
+         "required_in_reduce": need_reduce,
+         "data_axes": list(topology.data_axes)},
     )

@@ -4,8 +4,14 @@
 `SpmdEngine` step — not a mock — over the full cross-product
 
     {fill_drain, 1f1b} x {sync, async} x
-    {adam, basis_rotation, pipedream_lr, delay_compensation} x
+    {adam, basis_rotation, pipedream_lr, delay_compensation, nesterov_pp} x
     {1-pod, 2-pod}
+
+plus the asynchronous-data-axis cells — {fill_drain, 1f1b} x
+{adam, nesterov_pp} x {2data, 2pod} with ``data_async=True, data_delay=1``
+— where the step/reduce HLO pair must prove the cross-replica gradient
+all-reduce left the step critical path without being lost
+(``--data-async-only`` runs just these, the cheap CI smoke)
 
 on tiny shapes (2 stages, 2 microbatches, forced host devices), runs every
 named check from `repro.analysis.jaxpr` / `repro.analysis.hlo` against the
@@ -46,8 +52,17 @@ from repro.analysis.jaxpr import (
 
 SCHEDULES = ("fill_drain", "1f1b")
 SYNC_MODES = ("sync", "async")
-OPTIMIZERS = ("adam", "basis_rotation", "pipedream_lr", "delay_compensation")
+OPTIMIZERS = (
+    "adam", "basis_rotation", "pipedream_lr", "delay_compensation",
+    "nesterov_pp",
+)
 TOPOLOGIES = ("1pod", "2pod")
+# async-data cells (deferred cross-replica reduction) need topologies with
+# more than one data shard: "2data" splits the data axis proper, "2pod"
+# reduces over the combined ("pod", "data") axes
+DATA_ASYNC_TOPOLOGIES = ("2data", "2pod")
+DATA_ASYNC_OPTIMIZERS = ("adam", "nesterov_pp")
+_DATA_DELAY = 1
 # kernel-backed / mixed-precision configurations audited on top of the base
 # matrix: (precision, use_kernels) per schedule — bf16 runs must satisfy
 # BF16_COMPUTE_POLICY (bf16 intermediates REQUIRED, f32 state), and every
@@ -90,11 +105,16 @@ def _topology(label: str):
         return Topology(stages=_K, data=1)
     if label == "2pod":
         return Topology(stages=_K, data=1, pods=2)
+    if label == "2data":
+        return Topology(stages=_K, data=2)
     raise ValueError(f"unknown topology label {label!r}")
 
 
 def required_devices() -> int:
-    return max(_topology(t).num_devices for t in TOPOLOGIES)
+    return max(
+        _topology(t).num_devices
+        for t in TOPOLOGIES + DATA_ASYNC_TOPOLOGIES
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +209,68 @@ def audit_cell(
     return results
 
 
+def audit_data_async_cell(
+    schedule: str,
+    opt_name: str,
+    topo_label: str,
+    data_delay: int = _DATA_DELAY,
+    compile_hlo: bool = True,
+) -> List[CheckResult]:
+    """Audit one asynchronous-data-axis cell (deferred reduction, D > 0).
+
+    The step and reduce programs are audited as a PAIR: the step's HLO must
+    carry NO all-reduce grouped over the data axes (``data_reduction`` with
+    ``deferred=True``), and ``async_data_reduction`` proves the deferred
+    reduce program still contains the cross-replica gradient all-reduce —
+    the reduction moved off the critical path, it did not vanish. Donation
+    aliasing is re-checked because the async step signature inserts the
+    ``gbar`` argument after the donated (params, opt_state) triple.
+    """
+    from repro.analysis.hlo import (
+        check_async_step_reduction,
+        check_collective_axes,
+        check_data_reduction,
+        check_donation,
+        parse_collectives,
+    )
+    from repro.engine.schedules import SCHEDULE_INVARIANTS
+    from repro.engine.spmd import SpmdEngine
+
+    cfg = _tiny_model_cfg()
+    topo = _topology(topo_label)
+    inv = SCHEDULE_INVARIANTS[schedule]
+    engine = SpmdEngine(
+        cfg, _opt_cfg(opt_name), num_stages=_K, num_microbatches=_M,
+        async_grads=True, schedule=schedule, topology=topo,
+        data_async=True, data_delay=data_delay, donate=True,
+    )
+    jx = engine.step_jaxpr(seq_len=_SEQ)
+    results = [check_dtype_policy(jx, F32_POLICY)]
+    results.append(
+        check_no_dot_outside_cond(
+            jx, cfg.vocab_size, require_gated=inv["vocab_dot_gated"]
+        )
+    )
+    if compile_hlo:
+        step_hlo = engine.compiled_step(seq_len=_SEQ).as_text()
+        reduce_hlo = engine.compiled_reduce(seq_len=_SEQ).as_text()
+        step_instrs = parse_collectives(step_hlo)
+        reduce_instrs = parse_collectives(reduce_hlo)
+        results.append(check_collective_axes(step_instrs, topo))
+        results.append(
+            check_collective_axes(
+                reduce_instrs, topo, name="collective_axes_reduce"
+            )
+        )
+        results.append(check_data_reduction(step_instrs, topo, deferred=True))
+        results.append(
+            check_async_step_reduction(step_instrs, reduce_instrs, topo)
+        )
+        expected, queues = engine.donated_leaf_indices()
+        results.append(check_donation(step_hlo, expected, queues))
+    return results
+
+
 def audit_precision_cell(
     schedule: str, precision: str, use_kernels: bool
 ) -> List[CheckResult]:
@@ -231,8 +313,12 @@ def run_matrix(
     optimizers: Optional[Tuple[str, ...]] = None,
     compile_hlo: bool = True,
     verbose: bool = True,
+    data_async_only: bool = False,
 ) -> Dict[str, Any]:
-    """Run the full grid + lint; return the JSON-able report."""
+    """Run the full grid + lint; return the JSON-able report.
+
+    ``data_async_only=True`` runs just the async-data cells + lint (the
+    cheap CI smoke configuration)."""
     from repro.analysis.lint import check_repo_lint
 
     if matrix != "smoke":
@@ -240,7 +326,8 @@ def run_matrix(
     opts = optimizers or OPTIMIZERS
 
     report: Dict[str, Any] = {"matrix": matrix, "cells": [], "scaling": [],
-                              "precision": [], "lint": None, "passed": True}
+                              "precision": [], "data_async": [],
+                              "lint": None, "passed": True}
 
     def note(tag: str, results: List[CheckResult]):
         ok = all(r.passed for r in results)
@@ -251,6 +338,24 @@ def run_matrix(
             )
             print(f"[{'ok' if ok else 'FAIL'}] {tag}: {states}", flush=True)
         return ok
+
+    if data_async_only:
+        for schedule, opt_name, topo_label in itertools.product(
+            SCHEDULES, DATA_ASYNC_OPTIMIZERS, DATA_ASYNC_TOPOLOGIES
+        ):
+            results = audit_data_async_cell(
+                schedule, opt_name, topo_label, compile_hlo=compile_hlo
+            )
+            note(f"data_async {schedule}/{opt_name}/{topo_label}", results)
+            report["data_async"].append({
+                "schedule": schedule, "optimizer": opt_name,
+                "topology": topo_label, "data_delay": _DATA_DELAY,
+                "checks": [r.to_json() for r in results],
+            })
+        lint = check_repo_lint()
+        note("ast_lint src/repro", [lint])
+        report["lint"] = lint.to_json()
+        return report
 
     for schedule, topo_label in itertools.product(SCHEDULES, TOPOLOGIES):
         res = audit_schedule_scaling(schedule, topo_label)
@@ -285,6 +390,19 @@ def run_matrix(
             "checks": [r.to_json() for r in results],
         })
 
+    for schedule, opt_name, topo_label in itertools.product(
+        SCHEDULES, DATA_ASYNC_OPTIMIZERS, DATA_ASYNC_TOPOLOGIES
+    ):
+        results = audit_data_async_cell(
+            schedule, opt_name, topo_label, compile_hlo=compile_hlo
+        )
+        note(f"data_async {schedule}/{opt_name}/{topo_label}", results)
+        report["data_async"].append({
+            "schedule": schedule, "optimizer": opt_name,
+            "topology": topo_label, "data_delay": _DATA_DELAY,
+            "checks": [r.to_json() for r in results],
+        })
+
     lint = check_repo_lint()
     note("ast_lint src/repro", [lint])
     report["lint"] = lint.to_json()
@@ -310,6 +428,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--lint-only", action="store_true",
         help="run only the AST lint over src/repro",
     )
+    p.add_argument(
+        "--data-async-only", action="store_true",
+        help="run only the async-data cells + lint (CI smoke)",
+    )
     args = p.parse_args(argv)
 
     if args.lint_only:
@@ -322,7 +444,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     else:
         opts = tuple(args.optimizers.split(",")) if args.optimizers else None
         report = run_matrix(
-            args.matrix, optimizers=opts, compile_hlo=not args.no_hlo
+            args.matrix, optimizers=opts, compile_hlo=not args.no_hlo,
+            data_async_only=args.data_async_only,
         )
     if args.out:
         with open(args.out, "w") as f:
@@ -330,7 +453,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"report -> {args.out}")
     n_checks = sum(len(c["checks"]) for c in report["cells"]) + \
         sum(len(s["checks"]) for s in report["scaling"]) + \
-        sum(len(p["checks"]) for p in report.get("precision", [])) + 1
+        sum(len(p["checks"]) for p in report.get("precision", [])) + \
+        sum(len(d["checks"]) for d in report.get("data_async", [])) + 1
     print(f"analysis {'PASSED' if report['passed'] else 'FAILED'} "
           f"({n_checks} check runs)")
     return 0 if report["passed"] else 1

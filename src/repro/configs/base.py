@@ -232,7 +232,7 @@ INPUT_SHAPES = {
 @dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "basis_rotation"  # adam | adamw | adasgd | nesterov |
-    # pipedream_lr | delay_compensation | basis_rotation
+    # nesterov_pp | pipedream_lr | delay_compensation | basis_rotation
     learning_rate: float = 1e-3
     beta1: float = 0.9
     beta2: float = 0.999

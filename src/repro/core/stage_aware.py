@@ -95,15 +95,24 @@ class StageContext:
     num_stages: int
     delays: Tuple[DelaySpec, ...]
     repeats: Tuple[int, ...]
+    # Uniform extra delay from an asynchronous DATA axis: with a deferred
+    # cross-replica reduction the gradient applied at step t is the D-step-old
+    # global reduction, on top of the per-stage pipeline delay. Every consumer
+    # of delay *values* (refresh_freqs, delay_scales) sees the TOTAL delay
+    # tau_k + data_delay; `delay_specs` stays pipeline-only because the FIFO
+    # wrapper models the physical per-stage stash — the data-axis delay is
+    # imposed by the engine's reduction FIFO, not by deepening the stage FIFO.
+    data_delay: int = 0
 
     def __post_init__(self):
         assert len(self.delays) == len(self.repeats)
+        assert self.data_delay >= 0
 
     def _expanded_delays(self) -> List[int]:
         out: List[int] = []
         for d, r in zip(self.delays, self.repeats):
             taus = d if isinstance(d, tuple) else (d,)
-            out.extend(int(t) for t in taus for _ in range(r))
+            out.extend(int(t) + self.data_delay for t in taus for _ in range(r))
         return out
 
     def refresh_freqs(
@@ -113,7 +122,10 @@ class StageContext:
 
         The budget is renormalised over the expanded canonical multiset, so
         the period assigned to delay tau is identical whether tau arrives as
-        a scalar (sim leaf) or as one slot of a stacked leaf's tuple.
+        a scalar (sim leaf) or as one slot of a stacked leaf's tuple. With a
+        ``data_delay``, the allocation runs on the TOTAL per-leaf delay
+        tau + data_delay — under async data parallelism every stage is that
+        much staler, and the budget shifts accordingly.
         """
         expanded = self._expanded_delays()
         flat = freqs_for_delays(
@@ -123,21 +135,24 @@ class StageContext:
         out: List[Union[int, Tuple[int, ...]]] = []
         for d in self.delays:
             if isinstance(d, tuple):
-                out.append(tuple(lut[int(t)] for t in d))
+                out.append(tuple(lut[int(t) + self.data_delay] for t in d))
             else:
-                out.append(lut[int(d)])
+                out.append(lut[int(d) + self.data_delay])
         return out
 
     def delay_specs(self) -> List[Union[int, str]]:
         """Per-leaf specs for the delay-FIFO wrappers: ``"stage"`` for
-        stage-stacked leaves, the scalar delay otherwise."""
+        stage-stacked leaves, the scalar delay otherwise. PIPELINE delay
+        only — ``data_delay`` is imposed upstream (the engine's deferred
+        reduction FIFO), so it must not deepen the stage FIFO."""
         return ["stage" if isinstance(d, tuple) else int(d) for d in self.delays]
 
     def delay_scales(self, params) -> "object":
-        """Pytree matching ``params`` of per-leaf delay values, broadcastable
-        over each leaf: scalar ints for single-stage leaves, a
-        ``(K, 1, ..., 1)`` fp32 array over the leading stage axis for stacked
-        leaves. Consumed by the delay-aware baselines (PipeDream-LR)."""
+        """Pytree matching ``params`` of per-leaf TOTAL delay values
+        (pipeline tau + ``data_delay``), broadcastable over each leaf: scalar
+        ints for single-stage leaves, a ``(K, 1, ..., 1)`` fp32 array over
+        the leading stage axis for stacked leaves. Consumed by the
+        delay-aware baselines (PipeDream-LR, Nesterov async-PP)."""
         import jax
         import jax.numpy as jnp
 
@@ -149,10 +164,10 @@ class StageContext:
                 assert p.shape[0] == len(d), (
                     f"stacked leaf leading axis {p.shape} != {len(d)} stages"
                 )
-                arr = jnp.asarray(d, jnp.float32).reshape(
-                    (len(d),) + (1,) * (len(p.shape) - 1)
-                )
+                arr = jnp.asarray(
+                    [t + self.data_delay for t in d], jnp.float32
+                ).reshape((len(d),) + (1,) * (len(p.shape) - 1))
                 leaves.append(arr)
             else:
-                leaves.append(int(d))
+                leaves.append(int(d) + self.data_delay)
         return jax.tree_util.tree_unflatten(treedef, leaves)

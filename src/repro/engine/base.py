@@ -33,6 +33,10 @@ class EngineState:
     params: Any
     opt_state: Any
     history: List[Any] = field(default_factory=list)
+    # async data axis (SpmdEngine ``data_async``): FIFO of the last D
+    # deferred cross-replica gradient reductions, oldest first. ``None``
+    # whenever the data axis is synchronous.
+    data_fifo: Optional[List[Any]] = None
 
 
 class PipelineEngine(abc.ABC):

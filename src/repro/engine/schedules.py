@@ -222,6 +222,135 @@ def make_fill_drain_loss(
     return loss_fn
 
 
+def make_fill_drain_local_grad(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    num_stages: int,
+    num_microbatches: int,
+    stage_axis: str = "stage",
+    data_axis: str = "data",
+):
+    """Fill-drain gradient WITHOUT the data-axis reduction (async data mode).
+
+    Returns ``grad_fn(stage_params, shared, batch) ->
+    (loss_r, (gs_r, gsh_r))`` where the leading axis of every output is the
+    data replica: loss_r ``(R,)``, gs_r ``(R, K, per, ...)``, gsh_r
+    ``(R, ...)`` for R = product of the data axes. No collective over the
+    data axes appears anywhere in the program — the deferred cross-replica
+    mean runs in a separate reduce program off the step critical path.
+
+    The synchronous fill-drain path differentiates OUTSIDE shard_map, where
+    the transpose of the replicated-parameter broadcast IS the data-axis
+    psum; here `jax.value_and_grad` runs INSIDE the per-device body (of the
+    per-device masked loss — the stage psums happen after differentiation),
+    so autodiff transposes only the ppermute chain and each replica keeps
+    its own local gradient.
+    """
+    M = num_microbatches
+    stage_f = _stage_apply_fn(cfg)
+
+    def per_device(stage_params, shared, tokens, labels):
+        k = jax.lax.axis_index(stage_axis)
+        K = num_stages
+        mb, S = tokens.shape[1], tokens.shape[2]
+
+        def local_loss(stage_params, shared):
+            # identical tick schedule to make_fill_drain_loss, minus the
+            # final pmean over the data axes
+            wk_raw = jax.tree.map(lambda x: x[0], stage_params)
+            shared_c = cast_params(shared, cfg.compute_dtype)
+
+            emb = _embed(shared_c, cfg, tokens)  # (M, mb, S, d)
+            if cfg.learnable_pos_emb:
+                emb = emb + shared_c["pos_emb"][:S].astype(emb.dtype)
+
+            d = emb.shape[-1]
+            zeros = jnp.zeros((mb, S, d), emb.dtype)
+            out_buf = jnp.zeros((M, mb, S, d), emb.dtype)
+            fwd_perm = [(i, i + 1) for i in range(K - 1)]
+
+            def tick(carry, t):
+                recv, out = carry
+                inject = jax.lax.dynamic_index_in_dim(
+                    emb, jnp.minimum(t, M - 1), axis=0, keepdims=False
+                )
+                inject = jnp.where(t < M, inject, zeros)
+                inp = jnp.where(k == 0, inject, recv)
+                h = stage_f(wk_raw, inp)
+                mb_idx = t - (K - 1)
+                collect = (mb_idx >= 0) & (k == K - 1)
+                idx = jnp.clip(mb_idx, 0, M - 1)
+                cur = jax.lax.dynamic_index_in_dim(
+                    out, idx, axis=0, keepdims=False
+                )
+                out = jax.lax.dynamic_update_index_in_dim(
+                    out, jnp.where(collect, h, cur), idx, axis=0
+                )
+                recv = jax.lax.ppermute(h, stage_axis, fwd_perm)
+                return (recv, out), None
+
+            ticks = jnp.arange(M + K - 1)
+            (_, out_buf), _ = jax.lax.scan(tick, (zeros, out_buf), ticks)
+
+            x = apply_norm(shared_c["final_norm"], out_buf)
+            logits = _logits(shared_c, cfg, x)  # (M, mb, S, V)
+            ce = cross_entropy(logits, labels)
+            is_last = (k == K - 1).astype(jnp.float32)
+            # per-device masked loss, NOT stage-psum'd: psum transposes to
+            # psum, so differentiating through an in-body stage psum would
+            # seed the cotangent K times (once per stage) and scale every
+            # gradient by K. The masked scalar seeds only the last stage's
+            # ce; transposed ppermutes carry its cotangent back through the
+            # pipeline, exactly like the outer-autodiff sync path.
+            return ce * is_last
+
+        loss, (gs, gsh) = jax.value_and_grad(local_loss, argnums=(0, 1))(
+            stage_params, shared
+        )
+        # replicate the loss value across stages AFTER differentiation (the
+        # transpose never sees these psums); still no data-axis collective.
+        # Shared grads are also summed over stages: each stage holds only its
+        # own contribution (embed on stage 0, norm/head on the last stage)
+        # and the P(data_axis) out_spec requires stage-replicated values —
+        # same tail as the 1f1b unreduced path.
+        loss = jax.lax.psum(loss, stage_axis)
+        gsh = jax.tree.map(lambda a: jax.lax.psum(a, stage_axis), gsh)
+        # add the replica axis: per-device shapes (1,), (1, 1, per, ...),
+        # (1, ...) assemble to (R,), (R, K, per, ...), (R, ...) globally
+        return (
+            loss[None],
+            jax.tree.map(lambda a: a[None], gs),
+            jax.tree.map(lambda a: a[None], gsh),
+        )
+
+    from jax.experimental.shard_map import shard_map
+
+    gf = shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(
+            P(stage_axis),
+            P(),
+            P(None, data_axis, None),
+            P(None, data_axis, None),
+        ),
+        out_specs=(
+            P(data_axis),
+            P(data_axis, stage_axis),
+            P(data_axis),
+        ),
+        check_rep=False,
+    )
+
+    def grad_fn(stage_params, shared, batch):
+        loss_r, gs_r, gsh_r = gf(
+            stage_params, shared, batch["tokens"], batch["labels"]
+        )
+        return loss_r, (gs_r, gsh_r)
+
+    return grad_fn
+
+
 # ---------------------------------------------------------------------------
 # 1F1B: explicit forward/backward ticks, O(K) activation stash
 # ---------------------------------------------------------------------------
@@ -249,12 +378,19 @@ def make_1f1b_grad(
     num_microbatches: int,
     stage_axis: str = "stage",
     data_axis: str = "data",
+    reduce_data: bool = True,
 ):
     """Returns grad_fn(stage_params, shared, batch) -> (loss, (gs, gsh)).
 
     Explicit-backward 1F1B: no reverse-mode pass over the tick scan, so XLA
     never materialises an O(M) residual/output buffer — the only per-stage
     activation state is the (2K-1, mb, S, d) input stash in the carry.
+
+    ``reduce_data=False`` (async data mode) skips the three data-axis pmeans
+    and returns per-replica outputs with a leading replica axis — loss
+    ``(R,)``, gs ``(R, K, per, ...)``, gsh ``(R, ...)`` — leaving NO
+    collective over the data axes in the program; the deferred cross-replica
+    mean runs in a separate reduce program off the step critical path.
     """
     M = num_microbatches
     K = num_stages
@@ -355,14 +491,28 @@ def make_1f1b_grad(
 
         # loss lives on the last stage; grads follow fill-drain's reduction
         # semantics: mean over data replicas, shared grads summed over stages
-        loss = jax.lax.pmean(jax.lax.psum(loss_acc, stage_axis), data_axis)
-        g_stage = jax.lax.pmean(g_stage, data_axis)
-        g_shared = jax.lax.pmean(jax.lax.psum(g_shared, stage_axis), data_axis)
-        g_stage = jax.tree.map(lambda a: a[None], g_stage)  # (1, per, ...)
-        return loss, g_stage, g_shared
+        if reduce_data:
+            loss = jax.lax.pmean(jax.lax.psum(loss_acc, stage_axis), data_axis)
+            g_stage = jax.lax.pmean(g_stage, data_axis)
+            g_shared = jax.lax.pmean(
+                jax.lax.psum(g_shared, stage_axis), data_axis
+            )
+            g_stage = jax.tree.map(lambda a: a[None], g_stage)  # (1, per, ...)
+            return loss, g_stage, g_shared
+        # async data mode: stage collectives only, plus a leading replica
+        # axis so each replica's local gradient survives to the output
+        loss = jax.lax.psum(loss_acc, stage_axis)
+        g_shared = jax.lax.psum(g_shared, stage_axis)
+        g_stage = jax.tree.map(lambda a: a[None, None], g_stage)
+        g_shared = jax.tree.map(lambda a: a[None], g_shared)
+        return loss[None], g_stage, g_shared
 
     from jax.experimental.shard_map import shard_map
 
+    out_specs = (
+        (P(), P(stage_axis), P()) if reduce_data
+        else (P(data_axis), P(data_axis, stage_axis), P(data_axis))
+    )
     gf = shard_map(
         per_device,
         mesh=mesh,
@@ -372,7 +522,7 @@ def make_1f1b_grad(
             P(None, data_axis, None),
             P(None, data_axis, None),
         ),
-        out_specs=(P(), P(stage_axis), P()),
+        out_specs=out_specs,
         check_rep=False,
     )
 
@@ -394,10 +544,21 @@ def make_schedule_grad(
     num_stages: int,
     num_microbatches: int,
     schedule: str = "fill_drain",
+    reduce_data: bool = True,
     **kw,
 ):
-    """grad_fn(stage_params, shared, batch) -> (loss, (g_stacked, g_shared))."""
+    """grad_fn(stage_params, shared, batch) -> (loss, (g_stacked, g_shared)).
+
+    ``reduce_data=False`` returns the UNREDUCED per-replica gradient instead
+    — ``(loss_r, (gs_r, gsh_r))`` with a leading data-replica axis and no
+    collective over the data axes anywhere in the program (async data mode;
+    the deferred cross-replica mean is a separate program).
+    """
     if schedule == "fill_drain":
+        if not reduce_data:
+            return make_fill_drain_local_grad(
+                cfg, mesh, num_stages, num_microbatches, **kw
+            )
         loss_fn = make_fill_drain_loss(cfg, mesh, num_stages, num_microbatches, **kw)
 
         def grad_fn(stage_params, shared, batch):
@@ -407,7 +568,10 @@ def make_schedule_grad(
 
         return grad_fn
     if schedule == "1f1b":
-        return make_1f1b_grad(cfg, mesh, num_stages, num_microbatches, **kw)
+        return make_1f1b_grad(
+            cfg, mesh, num_stages, num_microbatches,
+            reduce_data=reduce_data, **kw,
+        )
     raise ValueError(f"unknown pipeline schedule {schedule!r}; one of {SCHEDULES}")
 
 

@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import (
     PRECISION_POLICIES,
@@ -154,6 +154,16 @@ class SpmdEngine(PipelineEngine):
     the basis-rotation matmuls and the fused Adam scale through the Pallas
     kernels (`repro.kernels.ops`), interpreted off-TPU.
 
+    ``data_async=True, data_delay=D`` (D > 0) makes the DATA axis
+    asynchronous too (bounded staleness): the step program computes
+    per-replica local gradients with no ``(pod, data)`` collective on the
+    critical path and applies the D-step-old deferred global reduction
+    from an engine-level FIFO; a separate jitted reduce program (the only
+    one containing the data all-reduce) folds the fresh local grads for
+    consumption D steps later. Delay-aware optimizers see total staleness
+    tau_k + D through the `StageContext`. ``data_delay=0`` construction-
+    gates to the synchronous path, bit-identical to ``data_async=False``.
+
     ``topology`` places the engine on a `(pod, stage, data)` device layout
     (`repro.launch.topology.Topology`): the mesh comes from
     ``topology.make_mesh()`` and the gradient/loss data reduction spans
@@ -179,6 +189,8 @@ class SpmdEngine(PipelineEngine):
         topology: Optional[Topology] = None,
         precision: Union[str, PrecisionPolicy, None] = None,
         donate: Union[bool, str] = "auto",
+        data_async: bool = False,
+        data_delay: int = 0,
     ):
         from repro.models.model import init_model
         from repro.optim.base import apply_updates, clip_by_global_norm
@@ -222,6 +234,26 @@ class SpmdEngine(PipelineEngine):
             assert_process_slabs()
             topology.local_device_count(self._num_processes)  # divisibility
         self.mesh = mesh if mesh is not None else topology.make_mesh()
+
+        # -- asynchronous data axis (DESIGN.md §12) -------------------------
+        # D > 0 takes the cross-replica gradient all-reduce off the step
+        # critical path: the step program differentiates per replica (no
+        # (pod, data) collective anywhere inside it) and applies the D-step-
+        # old deferred reduction from the engine-level FIFO; a separate
+        # reduce program — the ONLY place the data all-reduce exists — folds
+        # the fresh local gradients and is consumed D steps later.
+        # D == 0 gates to the synchronous path at CONSTRUCTION time (same
+        # step program, optimizer tree and checkpoint layout), so
+        # ``data_async=True, data_delay=0`` is bit-identical to sync.
+        self.data_async = bool(data_async)
+        self.data_delay = int(data_delay)
+        if self.data_delay < 0:
+            raise ValueError(f"data_delay must be >= 0, got {self.data_delay}")
+        if self.data_delay > 0 and not self.data_async:
+            raise ValueError("data_delay > 0 requires data_async=True")
+        self._data_eff = self.data_async and self.data_delay > 0
+        D = self.data_delay if self._data_eff else 0
+
         self.grad_fn = make_pipeline_grad(
             cfg, self.mesh, K, M, schedule=schedule,
             data_axis=topology.schedule_data_axis,
@@ -232,14 +264,17 @@ class SpmdEngine(PipelineEngine):
         stacked_s, shared_s = jax.eval_shape(
             lambda p: stack_stage_params(p, cfg, K), shapes
         )
-        ctx = stage_context_for_stacked(stacked_s, shared_s, K)
+        # delay-aware bases (pipedream_lr, nesterov_pp, stage-aware rotation
+        # refresh) see the TOTAL per-leaf staleness tau_k + D via the context
+        ctx = stage_context_for_stacked(stacked_s, shared_s, K, data_delay=D)
         base = build_optimizer(ocfg, (stacked_s, shared_s), cfg,
                                num_stages=K, apply_delay=False,
                                use_kernels=use_kernels, stage_context=ctx)
-        if async_grads and K > 1:
+        if async_grads and (K > 1 or self._data_eff):
             self.opt = stage_delayed_optimizer(
                 base, ctx.delay_specs(), K,
                 store_params=(ocfg.name == "delay_compensation"),
+                extra_param_delay=D,
             )
         else:
             self.opt = base
@@ -255,7 +290,75 @@ class SpmdEngine(PipelineEngine):
             shared = apply_updates(shared, updates[1])
             return stacked, shared, opt_state, loss
 
-        self._step_fn = _step  # raw step, kept for the static analyzer
+        if self._data_eff:
+            self._local_grad_fn = make_pipeline_grad(
+                cfg, self.mesh, K, M, schedule=schedule,
+                data_axis=topology.schedule_data_axis, reduce_data=False,
+            )
+
+            def _step_async(stacked, shared, opt_state, gbar, batch, t):
+                # fresh per-replica loss + local grads; the deferred global
+                # mean ``gbar`` (from D steps ago) is what gets applied —
+                # clip and optimizer chain identical to the sync step
+                loss_r, local = self._local_grad_fn(stacked, shared, batch)
+                grads = gbar
+                if grad_clip:
+                    grads = clip_by_global_norm(grads, grad_clip)
+                updates, opt_state = self.opt.update(
+                    grads, opt_state, (stacked, shared), t
+                )
+                stacked = apply_updates(stacked, updates[0])
+                shared = apply_updates(shared, updates[1])
+                return stacked, shared, opt_state, loss_r, local
+
+            # reduce program: mean over the leading replica axis — lowered
+            # with replicated/stage-sharded out_shardings, this is the one
+            # place XLA emits the (pod, data)-grouped all-reduce
+            def _reduce(loss_r, local):
+                gs, gsh = local
+                mean0 = lambda a: jnp.mean(a, axis=0)
+                return jnp.mean(loss_r), (
+                    jax.tree.map(mean0, gs), jax.tree.map(mean0, gsh),
+                )
+
+            stage_sh = NamedSharding(self.mesh, PartitionSpec("stage"))
+            repl_sh = NamedSharding(self.mesh, PartitionSpec())
+            gbar_shardings = (
+                jax.tree.map(lambda _: stage_sh, stacked_s),
+                jax.tree.map(lambda _: repl_sh, shared_s),
+            )
+            # in_shardings pin the local-grad layout the step program emits
+            # (leading replica axis over the data axes) — without them an
+            # abstract lowering would treat the inputs as replicated and the
+            # audited reduce HLO would lose its all-reduce
+            dax = topology.schedule_data_axis
+            rep_sh = NamedSharding(self.mesh, PartitionSpec(dax))
+            rep_stage_sh = NamedSharding(self.mesh, PartitionSpec(dax, "stage"))
+            local_shardings = (
+                jax.tree.map(lambda _: rep_stage_sh, stacked_s),
+                jax.tree.map(lambda _: rep_sh, shared_s),
+            )
+            self._reduce_fn = _reduce
+            self._reduce_in_shardings = (rep_sh, local_shardings)
+            self._jit_reduce = jax.jit(
+                _reduce,
+                in_shardings=self._reduce_in_shardings,
+                out_shardings=(repl_sh, gbar_shardings),
+            )
+
+            def _zeros():
+                z = lambda p: jnp.zeros(p.shape, p.dtype)
+                return (
+                    jax.tree.map(z, stacked_s), jax.tree.map(z, shared_s),
+                )
+
+            # jitted with explicit out_shardings so multi-process runs build
+            # the warm-up zeros as GLOBAL arrays over the shared mesh
+            self._zero_gbar = jax.jit(_zeros, out_shardings=gbar_shardings)
+
+        self._step_fn = (
+            _step_async if self._data_eff else _step
+        )  # raw step, kept for the static analyzer
         # donate the stacked params, shared params, and optimizer state
         # (which carries the delay-FIFO queues) into the jitted step: XLA
         # updates them in place instead of copying every leaf each step.
@@ -272,9 +375,12 @@ class SpmdEngine(PipelineEngine):
         if donate == "auto":
             donate = jax.default_backend() in ("tpu", "gpu")
         self.donate = bool(donate)
+        # donated argnums stay (0, 1, 2) in async mode too: gbar (arg 3) is
+        # still referenced from the FIFO list until the engine drops it, so
+        # it must NOT be donated
         self._jit_step = (
-            jax.jit(_step, donate_argnums=(0, 1, 2)) if self.donate
-            else jax.jit(_step)
+            jax.jit(self._step_fn, donate_argnums=(0, 1, 2)) if self.donate
+            else jax.jit(self._step_fn)
         )
         self._stage_shapes = (stacked_s, shared_s)
 
@@ -285,8 +391,16 @@ class SpmdEngine(PipelineEngine):
             params = init_model(key if key is not None else jax.random.PRNGKey(0),
                                 self.cfg)
         stacked, shared = stack_stage_params(params, self.cfg, self.num_stages)
+        fifo = None
+        if self._data_eff:
+            # warm-up: the first D steps apply zero reductions — the exact
+            # analogue of the delay FIFO's zero-gradient warm-up
+            zero = self._zero_gbar()
+            fifo = [zero for _ in range(self.data_delay)]
         return EngineState(
-            params=(stacked, shared), opt_state=self.opt.init((stacked, shared))
+            params=(stacked, shared),
+            opt_state=self.opt.init((stacked, shared)),
+            data_fifo=fifo,
         )
 
     def _shape_batch(self, batch: Dict) -> Dict:
@@ -353,11 +467,30 @@ class SpmdEngine(PipelineEngine):
         self, state: EngineState, batch: Dict, t: int
     ) -> Tuple[EngineState, Any, Dict]:
         stacked, shared = state.params
-        stacked, shared, opt_state, loss = self._jit_step(
-            stacked, shared, state.opt_state, self._shape_batch(batch), jnp.int32(t)
+        batch = self._shape_batch(batch)
+        if not self._data_eff:
+            stacked, shared, opt_state, loss = self._jit_step(
+                stacked, shared, state.opt_state, batch, jnp.int32(t)
+            )
+            return (
+                EngineState((stacked, shared), opt_state),
+                loss,
+                {"ce": loss},
+            )
+        # async data axis: pop the D-step-old reduction, step with it, then
+        # dispatch the reduce of this step's fresh local grads and enqueue
+        # it. Both programs are async-dispatched, and since nothing needs
+        # the reduce result for D more steps, the all-reduce overlaps with
+        # the next steps' compute instead of serializing each one.
+        fifo = list(state.data_fifo)
+        gbar = fifo.pop(0)
+        stacked, shared, opt_state, loss_r, local = self._jit_step(
+            stacked, shared, state.opt_state, gbar, batch, jnp.int32(t)
         )
+        loss, reduced = self._jit_reduce(loss_r, local)
+        fifo.append(reduced)
         return (
-            EngineState((stacked, shared), opt_state),
+            EngineState((stacked, shared), opt_state, data_fifo=fifo),
             loss,
             {"ce": loss},
         )
@@ -381,6 +514,9 @@ class SpmdEngine(PipelineEngine):
         )
         batch = {"tokens": tok, "labels": tok}
         t = jax.ShapeDtypeStruct((), jnp.int32)
+        if self._data_eff:
+            gbar_s = jax.eval_shape(self._zero_gbar)
+            return stacked_s, shared_s, opt_s, gbar_s, batch, t
         return stacked_s, shared_s, opt_s, batch, t
 
     def step_jaxpr(self, seq_len: int = 8, microbatch_size: int = 0):
@@ -394,6 +530,20 @@ class SpmdEngine(PipelineEngine):
         (`.as_text()`) is what the collective auditor parses."""
         args = self.abstract_step_args(seq_len, microbatch_size)
         return self._jit_step.lower(*args).compile()
+
+    def compiled_reduce(self, seq_len: int = 8, microbatch_size: int = 0):
+        """Compiled executable of the deferred data-reduction program (async
+        data mode only) — the ONE program that may contain the
+        ``(pod, data)``-grouped gradient all-reduce. The analyzer audits the
+        step/reduce pair with `analysis.hlo.check_async_step_reduction`."""
+        assert self._data_eff, "compiled_reduce requires data_async + D > 0"
+        stacked_s, shared_s, _opt, _gbar, batch, _t = self.abstract_step_args(
+            seq_len, microbatch_size
+        )
+        loss_r_s, local_s = jax.eval_shape(
+            self._local_grad_fn, stacked_s, shared_s, batch
+        )
+        return self._jit_reduce.lower(loss_r_s, local_s).compile()
 
     def donated_leaf_indices(self) -> Tuple[List[int], List[int]]:
         """(expected_aliased, queue_leaves): flattened HLO parameter indices
@@ -427,6 +577,37 @@ class SpmdEngine(PipelineEngine):
         """Unstacked (per-layer) parameter tree, e.g. for evaluation."""
         stacked, shared = state.params
         return unstack_stage_params(stacked, shared, self.cfg)
+
+    def checkpoint_tree(self, state: EngineState) -> Any:
+        """Async data mode appends the in-flight reduction FIFO as a third
+        element, so a resumed run replays the exact same deferred gradients
+        (bitwise resume). The sync layout stays the 2-tuple the base class
+        defines — a ``--data-delay 0`` checkpoint is byte-identical to a
+        synchronous one."""
+        if self._data_eff:
+            return (state.params, state.opt_state, tuple(state.data_fifo))
+        return (state.params, state.opt_state)
+
+    def load_state(self, tree: Any) -> EngineState:
+        if len(tree) == 3:
+            params, opt_state, fifo = tree
+            fifo = list(fifo)
+        else:
+            params, opt_state = tree
+            fifo = None
+        if self._data_eff:
+            if fifo is None:
+                # warm-starting an async run from a synchronous checkpoint:
+                # the first D steps replay the zero-gradient warm-up
+                fifo = [self._zero_gbar() for _ in range(self.data_delay)]
+            if len(fifo) != self.data_delay:
+                raise ValueError(
+                    f"checkpoint FIFO depth {len(fifo)} does not match "
+                    f"data_delay={self.data_delay}"
+                )
+        else:
+            fifo = None
+        return EngineState(params=params, opt_state=opt_state, data_fifo=fifo)
 
     def checkpoint_job(
         self, path: str, state: EngineState, step: int = 0,

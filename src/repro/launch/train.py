@@ -83,6 +83,16 @@ def parse_args(argv=None):
     ap.add_argument("--sync", action="store_true",
                     help="synchronous gradients: no delay FIFO on either "
                          "backend (the cross-backend agreement reference)")
+    ap.add_argument("--data-async", action="store_true",
+                    help="asynchronous data axis: take the cross-replica "
+                         "gradient all-reduce off the step critical path and "
+                         "apply the --data-delay-step-old deferred reduction "
+                         "instead (sim backend models it as +D uniform "
+                         "gradient staleness)")
+    ap.add_argument("--data-delay", type=int, default=None,
+                    help="data-axis staleness D under --data-async "
+                         "(default 1; 0 = bit-identical to the synchronous "
+                         "data axis)")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -107,6 +117,19 @@ def parse_args(argv=None):
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.data_delay is not None and not args.data_async:
+        raise SystemExit("--data-delay only applies under --data-async")
+    if args.data_async and args.sync:
+        raise SystemExit(
+            "--sync forces fully synchronous gradients; it cannot be "
+            "combined with --data-async"
+        )
+    data_delay = (
+        (1 if args.data_delay is None else args.data_delay)
+        if args.data_async else 0
+    )
+    if data_delay < 0:
+        raise SystemExit("--data-delay must be >= 0")
     if args.backend == "sim" and args.schedule != "fill_drain":
         raise SystemExit(
             "--schedule picks the SPMD tick schedule; the sim backend imposes "
@@ -267,14 +290,19 @@ def main(argv=None):
             num_microbatches=args.microbatches, async_grads=not args.sync,
             schedule=args.schedule, use_kernels=args.use_kernels,
             topology=topology, precision=args.precision,
+            data_async=args.data_async, data_delay=data_delay,
         )
     else:
         # --sync drops the simulated delay FIFO (but keeps stage-aware
         # frequency allocation for K stages) — the same synchronous reference
-        # the spmd backend produces with async_grads=False
+        # the spmd backend produces with async_grads=False. --data-async adds
+        # D uniform extra staleness to every leaf's FIFO: the sim has one
+        # data replica, whose "reduction" is the identity, so delaying the
+        # gradient by D IS the deferred-reduction semantics.
         opt = build_optimizer(ocfg, params, cfg, num_stages=args.stages,
                               apply_delay=not args.sync,
-                              use_kernels=args.use_kernels)
+                              use_kernels=args.use_kernels,
+                              data_delay=data_delay)
         sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps,
                               ocfg.warmup_frac)
         dtree = delay_tree(params, cfg, args.stages)
@@ -325,7 +353,8 @@ def main(argv=None):
                   "stages": args.stages, "backend": args.backend,
                   "schedule": args.schedule if args.backend == "spmd" else None,
                   "topology": topo_str, "precision": args.precision,
-                  "use_kernels": args.use_kernels},
+                  "use_kernels": args.use_kernels,
+                  "data_async": args.data_async, "data_delay": data_delay},
     )
     _, losses = run_loop(engine, data, loop_cfg, state=state, start_step=start_step)
     if losses and main_proc:

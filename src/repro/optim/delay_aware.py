@@ -1,7 +1,8 @@
 """Delay-aware baselines: PipeDream-LR (stage-wise learning-rate scheduling,
-Yang et al. 2021) and Delay Compensation (Zheng et al. 2017, Fig. 19).
+Yang et al. 2021), Delay Compensation (Zheng et al. 2017, Fig. 19), and the
+Nesterov async-PP optimizer (Ajanthan et al. 2025, arXiv:2505.01099).
 
-Both consume the partition's staleness metadata through `StageContext`
+All consume the partition's staleness metadata through `StageContext`
 (`repro.core.stage_aware`): PipeDream-LR takes a pytree of per-leaf delay
 values that BROADCAST over each leaf — scalar ints for leaves owned by one
 stage (the sim layout), ``(K, 1, ..., 1)`` per-stage arrays over the leading
@@ -46,6 +47,65 @@ def pipedream_lr(
         return updates, state
 
     return Optimizer(inner.init, update)
+
+
+def nesterov_pp(
+    schedule: Schedule,
+    delays,
+    beta1: float = 0.99,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Delay-aware Nesterov look-ahead for async pipeline parallelism
+    (Ajanthan et al. 2025, arXiv:2505.01099).
+
+    Where plain Nesterov-Adam applies ONE extra momentum step to anticipate
+    the next update, the async-PP variant extrapolates the momentum tau + 1
+    applications ahead — one per step of gradient staleness — which in the
+    EMA geometry collapses to the closed form
+
+        n_t = beta1^(tau+1) * m_t + (1 - beta1^(tau+1)) * g_t
+
+    (geometric decay of the momentum share with the look-ahead horizon). At
+    tau = 0 this is exactly `optim.adam.nesterov_adam`; the second moment and
+    bias corrections are standard Adam.
+
+    ``delays``: pytree matching params of per-leaf TOTAL delays (pipeline +
+    data), broadcastable over each leaf — `StageContext.delay_scales` output,
+    so stage-stacked ``(K, per, ...)`` leaves get a different look-ahead
+    horizon per stage slice.
+    """
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    # beta1^(tau+1) per leaf; broadcastable like the delays themselves
+    look = jax.tree.map(
+        lambda t: jnp.asarray(beta1, jnp.float32)
+        ** (1.0 + jnp.asarray(t, jnp.float32)),
+        delays,
+    )
+
+    from repro.optim.base import bias_correction
+
+    def update(grads, state, params, step, aux=None):
+        lr = schedule(step)
+        bc1, bc2 = bias_correction(beta1, step), bias_correction(beta2, step)
+        m = jax.tree.map(
+            lambda g, mm: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+            grads, state["m"])
+        v = jax.tree.map(
+            lambda g, vv: beta2 * vv + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["v"])
+        updates = jax.tree.map(
+            lambda g, mm, vv, lk: -lr
+            * ((lk * mm + (1.0 - lk) * g.astype(jnp.float32)) / bc1)
+            / (jnp.sqrt(vv / bc2) + eps),
+            grads, m, v, look)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
 
 
 def delay_compensation(

@@ -12,7 +12,7 @@ from repro.core.basis_rotation import basis_rotation_adam
 from repro.core.stage_aware import StageContext
 from repro.optim.adam import adam, adasgd, nesterov_adam
 from repro.optim.base import Optimizer, make_schedule
-from repro.optim.delay_aware import delay_compensation, pipedream_lr
+from repro.optim.delay_aware import delay_compensation, nesterov_pp, pipedream_lr
 from repro.pipeline.delay import delayed_optimizer
 from repro.pipeline.partition import stage_context_for_tree
 
@@ -25,6 +25,7 @@ def build_optimizer(
     apply_delay: bool = True,
     use_kernels: bool = False,
     stage_context: Optional[StageContext] = None,
+    data_delay: int = 0,
 ) -> Optimizer:
     """Compose base optimizer + (optionally) the gradient-staleness wrapper.
 
@@ -36,10 +37,17 @@ def build_optimizer(
 
     ``apply_delay=False`` builds the bare optimizer for the distributed
     runtime, where staleness is physical (pipeline schedule), not simulated.
+
+    ``data_delay=D`` adds the uniform extra staleness of an asynchronous
+    data axis: delay-aware bases see total delay tau + D (via the context),
+    and the simulated FIFO (``apply_delay=True``) deepens every leaf's queue
+    by D — the sim-backend model of a D-step deferred data reduction (a
+    1-replica reduction is the identity, so delaying the gradient IS the
+    deferred-reduction semantics).
     """
     sched = make_schedule(ocfg.schedule, ocfg.learning_rate, ocfg.total_steps, ocfg.warmup_frac)
     ctx = stage_context if stage_context is not None else stage_context_for_tree(
-        params, model_cfg, num_stages
+        params, model_cfg, num_stages, data_delay=data_delay
     )
 
     name = ocfg.name
@@ -49,6 +57,13 @@ def build_optimizer(
         base = adasgd(sched, ocfg.beta1, ocfg.beta2, ocfg.eps)
     elif name == "nesterov":
         base = nesterov_adam(sched, ocfg.nesterov_beta, ocfg.beta2, ocfg.eps)
+    elif name == "nesterov_pp":
+        # delay-aware Nesterov (Ajanthan et al. 2505.01099): per-leaf
+        # look-ahead horizon = total delay (pipeline tau + data delay)
+        base = nesterov_pp(
+            sched, ctx.delay_scales(params), ocfg.nesterov_beta, ocfg.beta2,
+            ocfg.eps,
+        )
     elif name == "pipedream_lr":
         base = pipedream_lr(
             sched, ctx.delay_scales(params), ocfg.beta1, ocfg.beta2, ocfg.eps
@@ -82,12 +97,15 @@ def build_optimizer(
     else:
         raise ValueError(f"unknown optimizer {name}")
 
-    if apply_delay and num_stages > 1:
+    if apply_delay and (num_stages > 1 or data_delay > 0):
         delays = ctx.delay_specs()
         assert all(isinstance(d, int) for d in delays), (
             "the per-leaf FIFO wrapper needs scalar delays; stage-stacked "
             "layouts apply staleness via stage_delayed_optimizer instead"
         )
+        # one FIFO imposes the total delay tau + D per leaf — grads AND the
+        # delay-compensation param snapshots age uniformly by the data delay
+        delays = [d + data_delay for d in delays]
         base = delayed_optimizer(
             base, delays, store_params=(name == "delay_compensation")
         )

@@ -105,6 +105,7 @@ def stage_delayed_optimizer(
     specs: Sequence,
     num_stages: int,
     store_params: bool = False,
+    extra_param_delay: int = 0,
 ) -> Optimizer:
     """Delay wrapper for the SPMD stage-stacked parameter layout.
 
@@ -129,8 +130,16 @@ def stage_delayed_optimizer(
     (``aux={"stale_params": ...}``). Param queues warm-start with the current
     parameters (during warm-up the "stale" weights ARE the initial weights),
     mirroring ``delayed_optimizer``.
+
+    ``extra_param_delay=D`` deepens only the PARAM queues by D slots, so the
+    stale snapshot stage k reads is w_{t-(tau_k+D)} — the total staleness
+    when the engine additionally applies a D-step-old deferred data-axis
+    reduction to every gradient (async data mode). The grad queues stay at
+    pipeline depth: the data-axis delay on gradients is imposed upstream by
+    the engine's reduction FIFO, not here.
     """
     K = int(num_stages)
+    E = int(extra_param_delay)
     specs = list(specs)
 
     def _q_shape(p, s):
@@ -139,7 +148,7 @@ def stage_delayed_optimizer(
         return jnp.zeros((int(s),) + p.shape, jnp.float32) if int(s) > 0 else None
 
     def _p_queue(p, s):
-        depth = (K - 1) if s == "stage" else int(s)
+        depth = ((K - 1) if s == "stage" else int(s)) + E
         if depth <= 0:
             return None
         return jnp.broadcast_to(p.astype(jnp.float32), (depth,) + p.shape)
@@ -153,6 +162,22 @@ def stage_delayed_optimizer(
             idx = jnp.arange(K - 1)
             diag = q[idx, idx]
             stale = jnp.concatenate([diag, fresh[K - 1 :].astype(q.dtype)], axis=0)
+            new_q = jnp.concatenate([q[1:], fresh[None].astype(q.dtype)], axis=0)
+            return stale, new_q
+        return _push_pop(q, fresh)
+
+    def _pop_push_param(q, fresh, s):
+        """Param-queue pop with the extra data-axis depth E.
+
+        Queue depth is base+E and q[r] holds the value pushed depth-r steps
+        ago, so stage k's w_{t-(tau_k+E)} sits at row k — the SAME diagonal
+        read, now defined for every stage (E >= 1 means even the last stage
+        reads a queued snapshot instead of the fresh value)."""
+        if E == 0:
+            return _pop_push(q, fresh, s)
+        if s == "stage":
+            idx = jnp.arange(K)
+            stale = q[idx, idx]
             new_q = jnp.concatenate([q[1:], fresh[None].astype(q.dtype)], axis=0)
             return stale, new_q
         return _push_pop(q, fresh)
@@ -192,7 +217,7 @@ def stage_delayed_optimizer(
                     stale.append(p)
                     new_pq.append(None)
                 else:
-                    old, nq = _pop_push(q, p, s)
+                    old, nq = _pop_push_param(q, p, s)
                     stale.append(old)
                     new_pq.append(nq)
             inner_aux["stale_params"] = jax.tree_util.tree_unflatten(gdef, stale)

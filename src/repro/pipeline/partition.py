@@ -68,19 +68,22 @@ def delay_tree(params: Any, cfg: ModelConfig, num_stages: int) -> Any:
 
 
 def stage_context_for_tree(
-    params: Any, cfg: ModelConfig, num_stages: int
+    params: Any, cfg: ModelConfig, num_stages: int, data_delay: int = 0
 ) -> StageContext:
     """Per-layer (sim) layout: every leaf lives wholly on one stage, so each
-    delay is the scalar tau = K-1-stage of its owner."""
+    delay is the scalar tau = K-1-stage of its owner. ``data_delay`` is the
+    uniform extra staleness of an asynchronous data axis (total delay seen by
+    delay-aware consumers = tau + data_delay)."""
     return StageContext(
         num_stages=num_stages,
         delays=tuple(leaf_delays(params, cfg, num_stages)),
         repeats=(1,) * len(jax.tree_util.tree_leaves(params)),
+        data_delay=data_delay,
     )
 
 
 def stage_context_for_stacked(
-    stacked: Any, shared: Any, num_stages: int
+    stacked: Any, shared: Any, num_stages: int, data_delay: int = 0
 ) -> StageContext:
     """SPMD stage-stacked layout for the ``(stacked, shared)`` tuple.
 
@@ -106,5 +109,6 @@ def stage_context_for_stacked(
         delays.append(K - 1 if root in FIRST_STAGE_SHARED else 0)
         repeats.append(1)
     return StageContext(
-        num_stages=K, delays=tuple(delays), repeats=tuple(repeats)
+        num_stages=K, delays=tuple(delays), repeats=tuple(repeats),
+        data_delay=data_delay,
     )

@@ -1,0 +1,498 @@
+"""Asynchronous data axis: deferred cross-replica gradient reduction.
+
+Unit tests cover the `StageContext` total-delay accounting (pipeline tau +
+data delay), the delay-aware Nesterov optimizer's closed-form look-ahead,
+the param-queue deepening of the stage FIFO wrapper, the sim backend's
+composed FIFO depths, and the paired step/reduce analyzer check on
+synthetic collective instructions.
+
+The subprocess tests (forced 4-device host, like tests/test_donation.py)
+drive the REAL `SpmdEngine`: D=0 bitwise parity with the synchronous path,
+D=2 equivalence against a hand-rolled per-step reference reduction pushed
+through a python FIFO, bitwise mid-run checkpoint resume including the
+in-flight reduction FIFO, HLO placement of the data all-reduce, and a
+seeded mutation that swaps the async step program for a synchronous one
+and must flip exactly the two deferred-reduction checks. The spawn test at
+the bottom kills and resumes a REAL 2-process async-data run from its
+sharded checkpoint.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import (
+    CollectiveInstr,
+    check_async_step_reduction,
+    check_data_reduction,
+)
+from repro.configs.base import AttentionConfig, ModelConfig, OptimizerConfig
+from repro.core.stage_aware import StageContext
+from repro.launch.topology import Topology
+from repro.models.model import init_model
+from repro.optim.adam import nesterov_adam
+from repro.optim.base import Optimizer, make_schedule
+from repro.optim.delay_aware import nesterov_pp
+from repro.optim.factory import build_optimizer
+from repro.pipeline.delay import stage_delayed_optimizer
+from repro.pipeline.partition import stage_context_for_tree
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TINY = ModelConfig(
+    num_layers=2, d_model=16, d_ff=24, vocab_size=96, max_seq_len=32,
+    scan_layers=False,
+    attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8),
+)
+
+
+# -- StageContext: data delay is accounted, not queued ----------------------
+
+def test_stage_context_data_delay_accounting():
+    delays = ((3, 2, 1, 0), 3, 0)
+    repeats = (2, 1, 1)
+    ctx0 = StageContext(num_stages=4, delays=delays, repeats=repeats)
+    ctxD = StageContext(num_stages=4, delays=delays, repeats=repeats,
+                        data_delay=2)
+
+    # FIFO depth specs are PIPELINE-only: the data delay is imposed by the
+    # engine's deferred-reduction FIFO, not by deeper stage queues
+    assert ctxD.delay_specs() == ctx0.delay_specs() == ["stage", 3, 0]
+
+    # ...but every consumer of the delay VALUE sees the total tau + D
+    params = [jnp.zeros((4, 2, 3)), jnp.zeros((5,)), jnp.zeros((7,))]
+    for a, b in zip(jax.tree.leaves(ctx0.delay_scales(params)),
+                    jax.tree.leaves(ctxD.delay_scales(params))):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a) + 2)
+
+    # refresh allocation runs on the total delay: shifting every leaf by D
+    # equals building the context with pre-shifted pipeline delays
+    shifted = StageContext(num_stages=4, delays=((5, 4, 3, 2), 5, 2),
+                           repeats=repeats)
+    assert ctxD.refresh_freqs(8) == shifted.refresh_freqs(8)
+
+
+# -- Nesterov async-PP optimizer (Ajanthan et al. 2505.01099) ---------------
+
+def test_nesterov_pp_zero_delay_is_nesterov_adam():
+    sched = make_schedule("constant", 1e-2, 100, 0.0)
+    params = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([[0.5, 1.5]])}
+    a = nesterov_adam(sched, 0.99, 0.999, 1e-8)
+    b = nesterov_pp(sched, jax.tree.map(lambda p: 0, params), 0.99, 0.999,
+                    1e-8)
+    sa, sb = a.init(params), b.init(params)
+    for t in range(3):
+        g = jax.tree.map(lambda p: jnp.sin(p + t), params)
+        ua, sa = a.update(g, sa, params, jnp.int32(t))
+        ub, sb = b.update(g, sb, params, jnp.int32(t))
+        for x, y in zip(jax.tree.leaves(ua), jax.tree.leaves(ub)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6)
+
+
+def test_nesterov_pp_closed_form_look_ahead():
+    lr, beta1, beta2, eps = 1e-2, 0.9, 0.999, 1e-8
+    sched = make_schedule("constant", lr, 10, 0.0)
+    p = {"w": jnp.array([1.0, -0.5])}
+    g = {"w": jnp.array([0.3, 0.2])}
+
+    def first_update(tau):
+        opt = nesterov_pp(sched, {"w": tau}, beta1, beta2, eps)
+        u, _ = opt.update(g, opt.init(p), p, jnp.int32(0))
+        return np.asarray(u["w"])
+
+    # one step from zero moments: m = (1-b1) g, v = (1-b2) g^2, and the
+    # look-ahead collapses to n = b1^(tau+1) m + (1 - b1^(tau+1)) g
+    gw = np.asarray(g["w"])
+    m, v = (1 - beta1) * gw, (1 - beta2) * gw**2
+    for tau in (0, 1, 3):
+        look = beta1 ** (tau + 1)
+        n = look * m + (1 - look) * gw
+        want = -lr * (n / (1 - beta1)) / (np.sqrt(v / (1 - beta2)) + eps)
+        np.testing.assert_allclose(first_update(tau), want, rtol=3e-5)
+
+    # stage-stacked leaf with per-stage horizons: each row must match the
+    # scalar-delay computation for that row's tau
+    p2 = {"w": jnp.stack([p["w"], p["w"]])}
+    g2 = {"w": jnp.stack([g["w"], g["w"]])}
+    opt = nesterov_pp(sched, {"w": jnp.array([[1.0], [3.0]])}, beta1, beta2,
+                      eps)
+    u2, _ = opt.update(g2, opt.init(p2), p2, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(u2["w"][0]), first_update(1),
+                               rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(u2["w"][1]), first_update(3),
+                               rtol=3e-5)
+
+
+# -- stage FIFO wrapper: extra_param_delay deepens only the param queues ----
+
+def test_stage_fifo_extra_param_delay_snapshots():
+    K, STEPS = 2, 5
+    base = np.array([[10.0], [20.0]])
+    captured = []
+
+    def _update(grads, state, params, step, aux=None):
+        captured.append((np.asarray(jax.tree.leaves(grads)[0]),
+                         np.asarray(jax.tree.leaves(aux["stale_params"])[0])))
+        return jax.tree.map(jnp.zeros_like, grads), state
+
+    def run(E):
+        captured.clear()
+        opt = stage_delayed_optimizer(Optimizer(lambda p: {}, _update),
+                                      ["stage"], K, store_params=True,
+                                      extra_param_delay=E)
+        state = opt.init([jnp.asarray(base)])
+        for t in range(STEPS):
+            _, state = opt.update([jnp.full((K, 1), float(t + 1))], state,
+                                  [jnp.asarray(base) + t], jnp.int32(t))
+        return list(captured)
+
+    runs = {E: run(E) for E in (0, 1, 2)}
+    for E, got in runs.items():
+        for t, (gstale, pstale) in enumerate(got):
+            # grad queues are pipeline-depth regardless of E: stage k sees
+            # g_{t - (K-1-k)}, zeros during warm-up
+            want_g = np.array([[float(t + 1 - (K - 1 - k))
+                                if t - (K - 1 - k) >= 0 else 0.0]
+                               for k in range(K)])
+            np.testing.assert_array_equal(gstale, want_g, err_msg=f"E={E} t={t}")
+            # param queues carry the TOTAL delay: stage k sees
+            # w_{t - (K-1-k+E)}, clamped to the warm-start snapshot w_0
+            want_p = np.stack([base[k] + max(0, t - (K - 1 - k + E))
+                               for k in range(K)])
+            np.testing.assert_array_equal(pstale, want_p, err_msg=f"E={E} t={t}")
+
+
+# -- sim backend: data_delay composes into the per-leaf FIFO depths ---------
+
+def test_build_optimizer_sim_data_delay_deepens_grad_fifo():
+    params = init_model(jax.random.PRNGKey(0), TINY)
+    ocfg = OptimizerConfig(name="adam", total_steps=10)
+
+    def depths(data_delay, num_stages=2):
+        opt = build_optimizer(ocfg, params, TINY, num_stages=num_stages,
+                              data_delay=data_delay)
+        st = opt.init(params)
+        return [0 if q is None else int(q.shape[0]) for q in st["grad_q"]]
+
+    base_specs = [int(d) for d in
+                  stage_context_for_tree(params, TINY, 2).delay_specs()]
+    d0 = depths(0)
+    assert d0 == base_specs
+    # D=2: every leaf's FIFO is exactly 2 deeper — the deferred reduction
+    # delays ALL leaves uniformly, on top of the pipeline stage delay
+    assert depths(2) == [d + 2 for d in d0]
+    # single-stage still wraps when D > 0 (pure data-axis staleness)...
+    assert depths(2, num_stages=1) == [2] * len(d0)
+    # ...and D=0 single-stage builds the bare optimizer, no FIFO state
+    bare = build_optimizer(ocfg, params, TINY, num_stages=1)
+    assert "grad_q" not in bare.init(params)
+
+
+def test_sim_engine_data_delay_zero_bitwise():
+    """--data-delay 0 on the sim backend is the SAME program as no flag at
+    all (the spmd counterpart lives in the subprocess test below)."""
+    from repro.data import batches
+    from repro.engine import LoopConfig, SimEngine, run_loop
+
+    ocfg = OptimizerConfig(name="adam", total_steps=4)
+    params = init_model(jax.random.PRNGKey(0), TINY)
+
+    def losses(**kw):
+        opt = build_optimizer(ocfg, params, TINY, num_stages=2, **kw)
+        engine = SimEngine(TINY, opt)
+        state = engine.init_state(params=params)
+        _, ls = run_loop(engine, batches(TINY, 4, 16, seed=0),
+                         LoopConfig(steps=4), state=state)
+        return ls
+
+    assert losses(data_delay=0) == losses()
+
+
+# -- analyzer: paired step/reduce placement check ---------------------------
+
+def _data_all_reduce(topo):
+    return CollectiveInstr(op="all-reduce", out_bytes=128,
+                           replica_groups=topo.replica_groups(topo.data_axes))
+
+
+def test_check_data_reduction_deferred_mode():
+    topo = Topology(stages=2, data=2)
+    ar = _data_all_reduce(topo)
+    # sync contract: the data all-reduce must be IN the step
+    assert check_data_reduction([ar], topo).passed
+    assert not check_data_reduction([], topo).passed
+    # deferred contract inverts the first half: it must NOT be in the step
+    assert not check_data_reduction([ar], topo, deferred=True).passed
+    r = check_data_reduction([], topo, deferred=True)
+    assert r.passed and r.data["deferred"]
+
+
+def test_check_async_step_reduction_pairing():
+    topo = Topology(stages=2, data=2)
+    ar = _data_all_reduce(topo)
+    assert check_async_step_reduction([], [ar], topo).passed
+    # back on the critical path -> fail, whatever the reduce program holds
+    assert not check_async_step_reduction([ar], [ar], topo).passed
+    # vanished instead of deferred -> fail: the reduction must still happen
+    r = check_async_step_reduction([], [], topo)
+    assert not r.passed and r.data["required_in_reduce"]
+    # single data shard: deferred reduction is the identity, nothing required
+    assert check_async_step_reduction([], [], Topology(stages=2)).passed
+
+
+# -- launcher flag validation (before any heavy work) -----------------------
+
+@pytest.mark.parametrize("argv", [
+    ["--data-delay", "1"],                  # delay without --data-async
+    ["--data-async", "--data-delay", "-1"],  # negative delay
+    ["--data-async", "--sync"],             # contradictory modes
+])
+def test_train_data_async_flag_validation(argv):
+    from repro.launch import train
+
+    with pytest.raises(SystemExit):
+        train.main(argv + ["--smoke", "--steps", "1"])
+
+
+# -- subprocess: real SpmdEngine equivalence + checkpoint resume ------------
+
+EQUIV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys, tempfile
+sys.path.insert(0, "src")
+
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import AttentionConfig, ModelConfig, OptimizerConfig
+from repro.engine.spmd import SpmdEngine
+from repro.launch.topology import Topology
+from repro.models.model import init_model
+from repro.optim.base import apply_updates, clip_by_global_norm
+
+cfg = ModelConfig(num_layers=2, d_model=16, d_ff=24, vocab_size=96,
+                  max_seq_len=32, scan_layers=False,
+                  attention=AttentionConfig(num_heads=2, num_kv_heads=2,
+                                            head_dim=8))
+ocfg = OptimizerConfig(name="adam", total_steps=20)
+topo = Topology(stages=2, data=2)
+K, M, B, S, STEPS, D = 2, 2, 4, 8, 5, 2
+
+params = init_model(jax.random.PRNGKey(0), cfg)
+bs = []
+for k in jax.random.split(jax.random.PRNGKey(7), STEPS):
+    tok = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+    bs.append({"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)})
+
+def run(engine, t0=0, state=None):
+    st = engine.init_state(params=params) if state is None else state
+    losses = []
+    for t in range(t0, STEPS):
+        st, loss, _ = engine.step(st, bs[t], t)
+        losses.append(float(loss))
+    return st, losses
+
+for sched in ("fill_drain", "1f1b"):
+    e_sync = SpmdEngine(cfg, ocfg, K, M, schedule=sched, topology=topo,
+                        donate=False)
+    e_d0 = SpmdEngine(cfg, ocfg, K, M, schedule=sched, topology=topo,
+                      donate=False, data_async=True, data_delay=0)
+    st_s, l_s = run(e_sync)
+    st_0, l_0 = run(e_d0)
+    # --data-delay 0 is BITWISE the synchronous path
+    assert l_s == l_0, (sched, l_s, l_0)
+    for a, b in zip(jax.tree.leaves(st_s.params), jax.tree.leaves(st_0.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # D=2 against a hand-rolled reference: per-step reference reduction
+    # (the sync grad_fn) pushed through a python FIFO of depth D
+    e_a = SpmdEngine(cfg, ocfg, K, M, schedule=sched, topology=topo,
+                     donate=False, data_async=True, data_delay=D)
+    st_a, l_a = run(e_a)
+    stacked, shared = e_sync.init_state(params=params).params
+    opt_state = e_a.opt.init((stacked, shared))
+    fifo = [e_a._zero_gbar()] * D
+    ref_losses = []
+    for t in range(STEPS):
+        loss, grads = e_sync.grad_fn(stacked, shared,
+                                     e_sync._shape_batch(dict(bs[t])))
+        ref_losses.append(float(loss))
+        fifo.append(grads)
+        g = clip_by_global_norm(fifo.pop(0), 1.0)
+        updates, opt_state = e_a.opt.update(g, opt_state, (stacked, shared),
+                                            jnp.int32(t))
+        stacked = apply_updates(stacked, updates[0])
+        shared = apply_updates(shared, updates[1])
+    np.testing.assert_allclose(np.asarray(l_a), np.asarray(ref_losses),
+                               rtol=2e-5, atol=1e-6)
+    # f32, different all-reduce orderings between the shard_map reduce and
+    # the replicated-reference mean: per-element noise up to a few e-4
+    for a, b in zip(jax.tree.leaves(st_a.params),
+                    jax.tree.leaves((stacked, shared))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=2e-5)
+
+    # HLO placement: zero data-grouped all-reduces in the step program,
+    # at least one in the deferred reduce program
+    from repro.analysis.hlo import parse_collectives, _instr_grouping, _normalize
+    want = _normalize(topo.replica_groups(topo.data_axes))
+    n_step = sum(1 for i in parse_collectives(e_a.compiled_step().as_text())
+                 if i.op == "all-reduce" and _instr_grouping(i, topo) == want)
+    n_red = sum(1 for i in parse_collectives(e_a.compiled_reduce().as_text())
+                if i.op == "all-reduce" and _instr_grouping(i, topo) == want)
+    assert n_step == 0 and n_red >= 1, (sched, n_step, n_red)
+
+# mid-run checkpoint -> resume must be bitwise, INCLUDING the in-flight
+# reduction FIFO (saved as the checkpoint tree's third element)
+from repro.checkpoint import load_checkpoint
+e_a = SpmdEngine(cfg, ocfg, K, M, schedule="1f1b", topology=topo,
+                 donate=False, data_async=True, data_delay=D)
+st = e_a.init_state(params=params)
+full = []
+with tempfile.TemporaryDirectory() as tmp:
+    path = os.path.join(tmp, "ck")
+    for t in range(STEPS):
+        st, loss, _ = e_a.step(st, bs[t], t)
+        full.append(float(loss))
+        if t == 1:
+            e_a.save_checkpoint(path, st, step=t + 1)
+    tree, step0, _ = load_checkpoint(path)
+    st2 = e_a.load_state(tree)
+    assert len(st2.data_fifo) == D
+    resumed = []
+    for t in range(step0, STEPS):
+        st2, loss, _ = e_a.step(st2, bs[t], t)
+        resumed.append(float(loss))
+assert resumed == full[step0:], (resumed, full[step0:])
+for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(st2.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# an async engine refuses a FIFO of the wrong depth
+bad = SpmdEngine(cfg, ocfg, K, M, schedule="1f1b", topology=topo,
+                 donate=False, data_async=True, data_delay=D + 1)
+try:
+    bad.load_state((st.params, st.opt_state, tuple(st.data_fifo)))
+except ValueError:
+    pass
+else:
+    raise AssertionError("depth mismatch must raise")
+# ...but warm-starts from a synchronous 2-tuple with a zero FIFO
+warm = bad.load_state((st.params, st.opt_state))
+assert len(warm.data_fifo) == D + 1
+
+print("DATA_ASYNC_EQUIV_OK")
+"""
+
+
+def _run_script(script, timeout=900):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, cwd=REPO, env=env, timeout=timeout)
+
+
+def test_spmd_data_async_equivalence_and_resume():
+    out = _run_script(EQUIV_SCRIPT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "DATA_ASYNC_EQUIV_OK" in out.stdout
+
+
+# -- seeded mutation: the analyzer pair must catch a sync step --------------
+
+MUTATION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys
+sys.path.insert(0, "src")
+import json
+
+from repro.analysis import runner
+from repro.engine.spmd import SpmdEngine
+
+def checks(cell):
+    return {r.name: r.passed for r in cell}
+
+res = {"baseline": checks(runner.audit_data_async_cell("1f1b", "adam", "2data"))}
+
+# mutation: hand the auditor a SYNCHRONOUS step program posing as the async
+# one — the (pod, data) all-reduce is back on the critical path, and only
+# the deferred-reduction pair of checks may notice (donation and
+# collective_axes must stay green: same donated triple, declared axes)
+orig = SpmdEngine.compiled_step
+def sync_posing_as_async(self, seq_len=8, microbatch_size=0):
+    sync = SpmdEngine(self.cfg, runner._opt_cfg("adam"),
+                      num_stages=self.num_stages,
+                      num_microbatches=self.num_microbatches,
+                      async_grads=True, schedule=self.schedule,
+                      topology=self.topology, donate=True)
+    return orig(sync, seq_len, microbatch_size)
+
+SpmdEngine.compiled_step = sync_posing_as_async
+try:
+    res["mutated"] = checks(runner.audit_data_async_cell("1f1b", "adam", "2data"))
+finally:
+    SpmdEngine.compiled_step = orig
+print(json.dumps(res))
+"""
+
+
+def test_async_reduction_checks_catch_sync_step_mutation():
+    out = _run_script(MUTATION_SCRIPT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    base, mut = res["baseline"], res["mutated"]
+    assert all(base.values()), base
+    flipped = {k for k in base if base[k] != mut[k]}
+    assert flipped == {"data_reduction", "async_data_reduction"}, (base, mut)
+
+
+# -- multi-process spawn: async-data run resumes from a sharded ckpt --------
+
+TRAIN_ARGS = ("--backend spmd --smoke --arch paper_95m --optimizer adam "
+              "--batch 4 --seq 32 --lr 1e-3 --log-every 2 --steps 8 "
+              "--ckpt-every 4 --stages 2 --data-par 2 "
+              "--data-async --data-delay 1")
+
+
+def _spawn(extra, train_args, timeout=840):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, "-m", "repro.launch.spawn", *extra, "--",
+           *train_args.split()]
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(cmd, capture_output=True, text=True, cwd=REPO,
+                          env=env, timeout=timeout)
+
+
+def test_spawn_async_data_bitwise_resume_from_sharded_ckpt(tmp_path):
+    """2-process (stages=2, data=2) --data-async --data-delay 1 run: kill a
+    process after the step-4 checkpoint commits, relaunch the same
+    topology, and the merged metrics must equal the uninterrupted run's bit
+    for bit — the sharded checkpoint round-trips the reduction FIFO."""
+    ref_out = str(tmp_path / "ref.json")
+    out = _spawn(["--procs", "2", "--timeout", "780"],
+                 f"{TRAIN_ARGS} --out {ref_out}")
+    assert out.returncode == 0, out.stderr[-3000:]
+    ref = json.load(open(ref_out))
+    assert ref["data_async"] and ref["data_delay"] == 1
+    assert len(ref["losses"]) == 8
+
+    ckpt = str(tmp_path / "ckpt")
+    res_out = str(tmp_path / "res.json")
+    run_args = f"{TRAIN_ARGS} --ckpt-dir {ckpt} --out {res_out}"
+    out = _spawn(["--procs", "2", "--timeout", "780", "--kill-pod-at", "4",
+                  "--grace", "8", "--resume-procs", "2",
+                  "--resume-with", run_args],
+                 run_args)
+    assert out.returncode == 0, out.stderr[-3000:]
+
+    res = json.load(open(res_out))
+    assert res["steps_done"] == 8 and res["start_step"] == 0
+    assert res["losses"] == ref["losses"], (res["losses"], ref["losses"])
